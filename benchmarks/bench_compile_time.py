@@ -1,0 +1,60 @@
+"""C4 — host compile-time and RAM: prejudging (compile once) vs the
+compile-both oracle.  The paper's motivation: 8 h for a microcircuit, 2x
+worse when compiling both paradigms."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    SwitchingCompiler,
+    load_or_generate,
+    random_layer,
+    train_switch_classifier,
+)
+from repro.core.layer import SNNNetwork
+
+from .common import csv_row
+
+
+def run():
+    ds = load_or_generate()
+    clf, _ = train_switch_classifier(ds, seed=0)
+    rng = np.random.default_rng(0)
+    layers = [
+        random_layer(int(rng.integers(200, 500)), int(rng.integers(200, 500)),
+                     float(rng.uniform(0.2, 1.0)), int(rng.integers(1, 16)),
+                     seed=i)
+        for i in range(30)
+    ]
+    net = SNNNetwork(layers=layers)
+
+    t0 = time.perf_counter()
+    rep_sw = SwitchingCompiler("classifier", clf).compile_network(net)
+    t_sw = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rep_id = SwitchingCompiler("ideal").compile_network(net)
+    t_id = time.perf_counter() - t0
+
+    print("\n# C4: compile work, 30-layer random network")
+    print(f"  classifier-switched: {t_sw:6.2f}s, "
+          f"{rep_sw.total_compilations} compilations, "
+          f"host RAM {rep_sw.host_bytes_peak/1e6:7.1f} MB, "
+          f"{rep_sw.total_pes} PEs")
+    print(f"  ideal (compile both): {t_id:6.2f}s, "
+          f"{rep_id.total_compilations} compilations, "
+          f"host RAM {rep_id.host_bytes_peak/1e6:7.1f} MB, "
+          f"{rep_id.total_pes} PEs")
+    speedup = t_id / max(t_sw, 1e-9)
+    ram_save = 1 - rep_sw.host_bytes_peak / rep_id.host_bytes_peak
+    pe_overhead = rep_sw.total_pes / rep_id.total_pes - 1
+    print(f"  compile speedup {speedup:.2f}x; host RAM saved "
+          f"{ram_save*100:.0f}%; PE overhead vs ideal {pe_overhead*100:.1f}%")
+    csv_row("c4_compile_time", t_sw * 1e6 / 30,
+            f"speedup={speedup:.2f};ram_saved={ram_save:.2f};"
+            f"pe_overhead={pe_overhead:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Table I — DTCM cost model, printed byte-for-byte + evaluation latency."""
+from __future__ import annotations
+
+from repro.core import DEFAULT_S2, LayerCharacter, random_layer, serial_pe_count
+from repro.core.cost_model import (
+    parallel_dominant_cost,
+    parallel_subordinate_overhead,
+    serial_pe_cost,
+    total,
+)
+from repro.core.parallel_compiler import compile_parallel
+
+from .common import csv_row, timeit
+
+
+def run():
+    print("\n# Table I: cost model in DTCM (bytes), reference layer "
+          "255x255 @50% delay=16")
+    s = serial_pe_cost(255, 255, 0.5, 16, 1)
+    for item, b in s.items():
+        print(f"  serial.{item:<28s} {b:>10.0f}")
+    print(f"  serial.TOTAL{'':<23s} {total(s):>10.0f}  "
+          f"(DTCM budget {DEFAULT_S2.dtcm_bytes})")
+    d = parallel_dominant_cost(255, 255, 16, 1)
+    for item, b in d.items():
+        print(f"  parallel.dominant.{item:<19s} {b:>10.0f}")
+    print(f"  parallel.dominant.TOTAL{'':<12s} {total(d):>10.0f}")
+    sub = parallel_subordinate_overhead(255, 16, 1)
+    for item, b in sub.items():
+        print(f"  parallel.subordinate.{item:<16s} {b:>10.0f}")
+    layer = random_layer(255, 255, 0.5, 16, seed=0)
+    prog = compile_parallel(layer)
+    print(f"  parallel.subordinate.wdm (measured) {prog.wdm_bytes:>7d}  "
+          "('can't be accurately estimated' -> compiler measures)")
+
+    us = timeit(lambda: serial_pe_count(LayerCharacter(500, 500, 0.5, 8)))
+    csv_row("table1_serial_cost_eval", us, f"pes={serial_pe_count(LayerCharacter(500, 500, 0.5, 8))}")
+    us = timeit(lambda: compile_parallel(layer), iters=3)
+    csv_row("table1_parallel_compile", us,
+            f"pes={prog.pe_count};wdm_bytes={prog.wdm_bytes}")
+
+
+if __name__ == "__main__":
+    run()

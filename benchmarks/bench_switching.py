@@ -1,0 +1,49 @@
+"""Fig 5 — memory performance (avg PEs vs delay range) for the two pure
+paradigms, the classifier-switched system, and the ideal oracle."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    LABEL_PARALLEL,
+    LABEL_SERIAL,
+    average_pes_by_delay,
+    load_or_generate,
+    train_switch_classifier,
+)
+
+from .common import csv_row, timeit
+
+
+def run():
+    ds = load_or_generate()
+    clf, acc = train_switch_classifier(ds, seed=0)
+    pred = clf.predict(ds.features)
+    full_acc = float((pred == ds.labels).mean())
+    print(f"\n# Fig 5: avg PEs per delay range (classifier acc "
+          f"{acc*100:.2f}% test / {full_acc*100:.2f}% full; paper 91.69%)")
+
+    serial = average_pes_by_delay(ds, np.full(len(ds), LABEL_SERIAL))
+    parallel = average_pes_by_delay(ds, np.full(len(ds), LABEL_PARALLEL))
+    switched = average_pes_by_delay(ds, pred)
+    ideal = average_pes_by_delay(ds, ds.labels)
+    print("  delay |  serial | parallel | switched |  ideal")
+    for d in sorted(serial):
+        print(f"  {d:>5d} | {serial[d]:7.2f} | {parallel[d]:8.2f} | "
+              f"{switched[d]:8.2f} | {ideal[d]:6.2f}")
+    m = lambda t: float(np.mean(list(t.values())))
+    print(f"  MEAN  | {m(serial):7.2f} | {m(parallel):8.2f} | "
+          f"{m(switched):8.2f} | {m(ideal):6.2f}")
+    gap = (m(switched) - m(ideal)) / m(ideal) * 100
+    save_vs_best_pure = (1 - m(switched) / min(m(serial), m(parallel))) * 100
+    print(f"  switched is {gap:.1f}% above ideal; saves "
+          f"{save_vs_best_pure:.1f}% PEs vs the best pure paradigm (C3)")
+
+    us = timeit(lambda: clf.predict(ds.features[:1000]))
+    csv_row("fig5_switching", us,
+            f"acc={full_acc:.4f};mean_pes_switched={m(switched):.3f};"
+            f"mean_pes_ideal={m(ideal):.3f};saving_pct={save_vs_best_pure:.1f}")
+
+
+if __name__ == "__main__":
+    run()

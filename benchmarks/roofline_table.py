@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md tables from the dry-run results JSONL.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table \
+        benchmarks/data/dryrun/results.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import OrderedDict
+
+
+def fmt_bytes(n):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def load(path):
+    recs = OrderedDict()
+    for line in open(path):
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+        recs[key] = r  # later lines win (re-runs)
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    print(f"\n### Dry-run, {mesh} mesh "
+          f"({'2x16x16=512' if mesh == 'multi' else '16x16=256'} chips)\n")
+    print("| arch | shape | status | compile_s | HBM args/dev | temp/dev | "
+          "collectives (count) |")
+    print("|---|---|---|---|---|---|---|")
+    for (a, s, m, v), r in recs.items():
+        if m != mesh or v != "baseline":
+            continue
+        if r["status"] == "skipped":
+            print(f"| {a} | {s} | SKIP (sub-quadratic-only shape) | — | — | — | — |")
+            continue
+        if r["status"] == "error":
+            print(f"| {a} | {s} | ERROR: {r['error'][:60]} | — | — | — | — |")
+            continue
+        ma = r.get("memory_analysis", {})
+        args = fmt_bytes(ma.get("argument_size_in_bytes", 0))
+        temp = fmt_bytes(ma.get("temp_size_in_bytes", 0))
+        cc = r.get("collective_counts", {})
+        cstr = " ".join(f"{k.split('-')[0]}:{v2}" for k, v2 in cc.items() if v2)
+        print(f"| {a} | {s} | ok | {r['compile_s']} | {args} | {temp} | "
+              f"{cstr or 'none'} |")
+
+
+def roofline_table(recs):
+    print("\n### Roofline terms (single-pod 16x16; per-device, per-step)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          "roofline_frac | model/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s, m, v), r in recs.items():
+        if m != "single" or v != "baseline" or r["status"] != "ok":
+            continue
+        print(f"| {a} | {s} | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+              f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+              f"{r['roofline_fraction']:.3f} | {r['model_flops_ratio']:.2f} |")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "benchmarks/data/dryrun/results.jsonl"
+    recs = load(path)
+    n_ok = sum(r["status"] == "ok" for r in recs.values())
+    n_skip = sum(r["status"] == "skipped" for r in recs.values())
+    n_err = sum(r["status"] == "error" for r in recs.values())
+    print(f"{len(recs)} cells: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    dryrun_table(recs, "single")
+    dryrun_table(recs, "multi")
+    roofline_table(recs)
+
+
+if __name__ == "__main__":
+    main()

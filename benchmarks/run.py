@@ -1,0 +1,51 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver — one section per paper table/figure:
+
+  Table I  -> bench_cost_model       (DTCM byte model + compile latency)
+  Fig 3    -> bench_marginals        (marginal win-rate distributions)
+  Fig 4    -> bench_classifiers      (12-classifier accuracy comparison)
+  Fig 5    -> bench_switching        (avg PEs vs delay: 4 policies)
+  §IV-C    -> bench_gesture          (2048-20-4 gesture model PEs)
+  §IV motivation -> bench_compile_time (prejudge vs compile-both)
+  kernels  -> bench_kernels          (Pallas kernels + runtime throughput)
+
+``PYTHONPATH=src python -m benchmarks.run [--fast] [--seeds N]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="classifier seeds for Fig 4 (paper uses 20)")
+    ap.add_argument("--fast", action="store_true",
+                    help="subsample classifier training (quick check)")
+    args = ap.parse_args()
+
+    from . import (
+        bench_classifiers,
+        bench_compile_time,
+        bench_cost_model,
+        bench_gesture,
+        bench_kernels,
+        bench_marginals,
+        bench_switching,
+    )
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    bench_cost_model.run()
+    bench_marginals.run()
+    bench_classifiers.run(seeds=args.seeds, fast=args.fast)
+    bench_switching.run()
+    bench_gesture.run()
+    bench_compile_time.run()
+    bench_kernels.run()
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

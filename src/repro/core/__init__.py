@@ -1,0 +1,52 @@
+# The paper's primary contribution: serial/parallel SNN compilation
+# paradigms, the Table I cost model, the 16k-layer dataset, the
+# 12-classifier zoo, and the fast-switching compiling system.
+from .hw import SpiNNaker2Config, TPUv5eConfig, DEFAULT_S2, DEFAULT_TPU
+from .layer import (
+    LayerCharacter,
+    LIFParams,
+    SNNLayer,
+    SNNNetwork,
+    feedforward_network,
+    random_layer,
+)
+from .dataset import (
+    LABEL_PARALLEL,
+    LABEL_SERIAL,
+    ParadigmDataset,
+    generate_dataset,
+    load_or_generate,
+)
+from .parallel_compiler import (
+    OptFlags,
+    ParallelProgram,
+    compile_parallel,
+    parallel_pe_count_exact,
+)
+from .serial_compiler import (
+    SerialProgram,
+    compile_serial,
+    serial_pe_count,
+    serial_pe_count_exact,
+)
+from .switching import (
+    CompileReport,
+    CompiledLayer,
+    SwitchingCompiler,
+    average_pes_by_delay,
+    train_switch_classifier,
+)
+
+__all__ = [
+    "SpiNNaker2Config", "TPUv5eConfig", "DEFAULT_S2", "DEFAULT_TPU",
+    "LayerCharacter", "LIFParams", "SNNLayer", "SNNNetwork",
+    "feedforward_network", "random_layer",
+    "LABEL_PARALLEL", "LABEL_SERIAL", "ParadigmDataset",
+    "generate_dataset", "load_or_generate",
+    "OptFlags", "ParallelProgram", "compile_parallel",
+    "parallel_pe_count_exact",
+    "SerialProgram", "compile_serial", "serial_pe_count",
+    "serial_pe_count_exact",
+    "CompileReport", "CompiledLayer", "SwitchingCompiler",
+    "average_pes_by_delay", "train_switch_classifier",
+]

@@ -1,0 +1,134 @@
+"""Table I DTCM cost models, byte-exact.
+
+Every formula below is a row of Table I of the paper.  Each function returns a
+dict of item -> bytes so benchmarks can print the table and tests can pin
+individual rows.
+
+Interpretation notes (documented in DESIGN.md §2 "assumptions changed"):
+
+* ``n_neuron`` in the serial rows is the PE's *target sub-population* size;
+  source neurons appear through the synaptic-matrix row count and the
+  address-list length (one block per source neuron, paper §III-A).
+* The parallel-dominant row "neuron and synapse model" is printed in the paper
+  as ``(32/8)*n_neuron*n_neuron*max_connected_rate`` — a literal copy of the
+  serial synaptic-matrix row.  With that reading no dominant PE could ever fit
+  a >20%-dense 500-neuron layer in 96 kB, contradicting the paper's own §IV-A
+  claim that one dominant PE always suffices on the dataset grid.  We use the
+  LIF parameter row ``(32/8)*n_param`` (as in the serial column) instead and
+  verify the paper's "one dominant PE is enough" claim as a test.
+* DRAM is excluded (paper §IV-A): the DMA-buffer row is 0.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from .hw import SpiNNaker2Config, DEFAULT_S2
+
+
+def serial_pe_cost(
+    n_tgt_pe: int,
+    n_src_pe: int,
+    density: float,
+    delay_range: int,
+    n_source_vertex: int,
+    *,
+    hw: SpiNNaker2Config = DEFAULT_S2,
+    n_projection_type: int = 2,
+    matrix_split: int = 1,
+) -> Dict[str, float]:
+    """Serial-paradigm DTCM bytes for one PE (Table I, upper block).
+
+    ``matrix_split`` divides only the synaptic matrix (the paper distributes
+    the matrix across 2-4 adjacent PEs when dense; all other structures are
+    replicated on each of those PEs).
+    """
+    synaptic_matrix = (32 / 8) * n_src_pe * n_tgt_pe * density / matrix_split
+    return {
+        "input_spike_buffer": (32 / 8) * n_tgt_pe,
+        "dma_buffer": 0.0,  # DRAM not involved
+        "master_population_table": (96 / 8) * n_source_vertex,
+        "address_list": (32 / 8) * n_src_pe,  # one block row per source neuron
+        "synaptic_matrix": synaptic_matrix,
+        "synaptic_input_buffer": (16 / 8) * n_tgt_pe * delay_range * n_projection_type,
+        "neuron_synapse_model": (32 / 8) * hw.lif_n_params,
+        "output_recording": (32 / 8) * (math.ceil(n_tgt_pe / 32) + 1)
+        + (32 / 8) * n_tgt_pe * 3,
+        "stack_heap": (96 / 8) * n_source_vertex,
+        "os": float(hw.os_overhead_bytes),
+    }
+
+
+def serial_pe_overhead(
+    n_tgt_pe: int,
+    n_src_pe: int,
+    delay_range: int,
+    n_source_vertex: int,
+    *,
+    hw: SpiNNaker2Config = DEFAULT_S2,
+    n_projection_type: int = 2,
+) -> float:
+    """Everything except the synaptic matrix (used to size the matrix split)."""
+    cost = serial_pe_cost(
+        n_tgt_pe, n_src_pe, 0.0, delay_range, n_source_vertex,
+        hw=hw, n_projection_type=n_projection_type,
+    )
+    return float(sum(cost.values()))
+
+
+def parallel_dominant_cost(
+    n_source: int,
+    n_target: int,
+    delay_range: int,
+    n_source_vertex: int,
+    *,
+    hw: SpiNNaker2Config = DEFAULT_S2,
+) -> Dict[str, float]:
+    """Parallel-paradigm dominant-PE DTCM bytes (Table I, middle block)."""
+    return {
+        "input_spike_buffer": (32 / 8) * n_source,
+        "reversed_order": (32 / 16) * n_source * delay_range,
+        "input_merging_table": n_source * delay_range * 3,
+        "stacked_input": n_source * delay_range * 4,
+        # Paper typo corrected: LIF parameter block, not the synaptic matrix.
+        "neuron_synapse_model": (32 / 8) * hw.lif_n_params,
+        "output_recording": (32 / 8) * n_target * 4,
+        "stack_heap": (96 / 8) * n_source_vertex,
+        "os": float(hw.os_overhead_bytes),
+    }
+
+
+def parallel_subordinate_overhead(
+    n_tgt_pe: int,
+    delay_range: int,
+    n_source_vertex: int,
+    *,
+    hw: SpiNNaker2Config = DEFAULT_S2,
+    n_projection_type: int = 2,
+) -> Dict[str, float]:
+    """Parallel subordinate DTCM bytes, *excluding* the weight-delay-map.
+
+    The WDM row is "(can't be accurately estimated)" in Table I — the
+    compiler measures it (:mod:`repro.core.parallel_compiler`).
+    """
+    return {
+        "output_recording": (16 / 8) * n_tgt_pe * delay_range * n_projection_type,
+        "stack_heap": (96 / 8) * n_source_vertex,
+        "os": float(hw.os_overhead_bytes),
+    }
+
+
+def total(cost: Dict[str, float]) -> float:
+    return float(sum(cost.values()))
+
+
+def equal_parts(n: int, cap: int) -> list:
+    """Split ``n`` items into ceil(n/cap) equal parts (paper: "equally split").
+
+    Returns the part sizes, e.g. equal_parts(500, 255) == [250, 250].
+    """
+    if n <= 0:
+        raise ValueError("n must be positive")
+    k = math.ceil(n / cap)
+    base, rem = divmod(n, k)
+    return [base + 1] * rem + [base] * (k - rem)

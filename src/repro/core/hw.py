@@ -1,0 +1,71 @@
+"""Hardware models.
+
+Two hardware descriptions live here:
+
+* :class:`SpiNNaker2Config` — the paper's target. All byte budgets in the
+  Table I cost model and both paradigm compilers are driven by this object,
+  so the switching system stays bit-faithful to the paper while remaining
+  parameterizable (the paper itself changes DTCM 64 kB -> 96 kB vs sPyNNaker).
+
+* :class:`TPUv5eConfig` — the roofline target for the JAX/Pallas runtimes and
+  the LM substrate.  Constants from the task spec: 197 TFLOP/s bf16 per chip,
+  819 GB/s HBM, ~50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SpiNNaker2Config:
+    """Per-PE resource model of SpiNNaker2 (paper §II)."""
+
+    # 128 kB SRAM per PE; the paper budgets 96 kB of it as DTCM for the
+    # compiled data structures (paper §IV-A, raised from sPyNNaker's 64 kB).
+    sram_bytes: int = 128 * 1024
+    dtcm_bytes: int = 96 * 1024
+
+    # sPyNNaker-lineage fixed neuron capacity per PE (paper §III / [14]).
+    max_neurons_per_pe: int = 255
+
+    # MAC array layout: 64 units as 4 (rows) x 16 (columns)  (paper §II).
+    mac_rows: int = 4
+    mac_cols: int = 16
+
+    # Operand precisions used throughout the paper: 8-bit weights,
+    # 32-bit synaptic words in the serial paradigm.
+    weight_bits: int = 8
+    serial_synapse_word_bits: int = 32
+
+    # The serial paradigm splits an over-budget synaptic matrix across
+    # 2..4 adjacent PEs (paper §IV-A).
+    max_matrix_split: int = 4
+
+    # Fixed baseline cost on every PE (Table I "hw mgmt & OS").
+    os_overhead_bytes: int = 6000
+
+    # LIF neuron+synapse model parameter count (Table I: "LIF:8+6").
+    lif_n_params: int = 8 + 6
+
+    @property
+    def mac_units(self) -> int:
+        return self.mac_rows * self.mac_cols
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUv5eConfig:
+    """Roofline constants for one TPU v5e chip (task spec)."""
+
+    peak_flops_bf16: float = 197e12      # FLOP/s
+    hbm_bandwidth: float = 819e9         # B/s
+    ici_link_bandwidth: float = 50e9     # B/s per link
+    hbm_bytes: int = 16 * 1024**3        # 16 GiB HBM per chip
+    vmem_bytes: int = 128 * 1024**2      # ~128 MiB VMEM
+    mxu_dim: int = 128                   # systolic array tile edge
+
+    # int8 matmuls run at 2x bf16 on the MXU (v5e supports int8 @ ~394 TOPS).
+    peak_ops_int8: float = 394e12
+
+
+DEFAULT_S2 = SpiNNaker2Config()
+DEFAULT_TPU = TPUv5eConfig()

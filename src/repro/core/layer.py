@@ -1,0 +1,191 @@
+"""SNN model abstractions: layer characters, layers, and the application graph.
+
+Terminology follows the paper (§III):
+
+* **application graph** — one vertex per population (layer); edges are
+  projections (synaptic connections between populations).
+* **layer character** — the 4-tuple the classifier sees:
+  (n_source, n_target, weight_density, delay_range).  This is all the
+  switching system may look at *before* compiling (paper §IV-B).
+* **machine graph** — sub-populations mapped onto PEs; produced by the
+  paradigm compilers in :mod:`repro.core.serial_compiler` /
+  :mod:`repro.core.parallel_compiler`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCharacter:
+    """The pre-compile observable features of one projection/layer.
+
+    Exactly the four factors from the paper's dataset (§IV-A).
+    """
+
+    n_source: int
+    n_target: int
+    weight_density: float   # fraction of nonzero synapses in [0, 1]
+    delay_range: int        # max synaptic delay in timesteps, >= 1
+
+    def as_features(self) -> np.ndarray:
+        return np.array(
+            [self.n_source, self.n_target, self.weight_density, self.delay_range],
+            dtype=np.float64,
+        )
+
+    def validate(self) -> None:
+        if self.n_source <= 0 or self.n_target <= 0:
+            raise ValueError("neuron counts must be positive")
+        if not (0.0 <= self.weight_density <= 1.0):
+            raise ValueError("weight_density must be in [0, 1]")
+        if self.delay_range < 1:
+            raise ValueError("delay_range must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """Leaky integrate-and-fire parameters for Eq. (1) of the paper.
+
+    V[t+1] = sum_j W[j,i] x[j, t-d(j,i)] + alpha * V[t] - z[t] * V_th
+    """
+
+    alpha: float = 0.9       # membrane decay
+    v_th: float = 1.0        # firing threshold
+    v_reset: float = 0.0     # unused by Eq. (1) (subtractive reset) but kept
+    n_projection_type: int = 2   # excitatory / inhibitory (Table I)
+
+
+@dataclasses.dataclass
+class SNNLayer:
+    """A concrete projection: weights + delays + the derived character.
+
+    ``weights`` is (n_source, n_target) float (signed: excitatory > 0,
+    inhibitory < 0); zero means no synapse.  ``delays`` is (n_source,
+    n_target) int in [1, delay_range]; entries where weights == 0 are
+    ignored.
+    """
+
+    weights: np.ndarray
+    delays: np.ndarray
+    delay_range: int
+    lif: LIFParams = dataclasses.field(default_factory=LIFParams)
+    name: str = "layer"
+
+    def __post_init__(self) -> None:
+        if self.weights.shape != self.delays.shape:
+            raise ValueError("weights and delays must share a shape")
+        if self.delays.size and self.connectivity().any():
+            dmax = int(self.delays[self.connectivity()].max())
+            if dmax > self.delay_range:
+                raise ValueError(f"delay {dmax} exceeds delay_range {self.delay_range}")
+
+    @property
+    def n_source(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def n_target(self) -> int:
+        return self.weights.shape[1]
+
+    def connectivity(self) -> np.ndarray:
+        return self.weights != 0.0
+
+    @property
+    def n_synapses(self) -> int:
+        return int(self.connectivity().sum())
+
+    def density(self) -> float:
+        return self.n_synapses / float(self.weights.size)
+
+    def character(self) -> LayerCharacter:
+        return LayerCharacter(
+            n_source=self.n_source,
+            n_target=self.n_target,
+            weight_density=self.density(),
+            delay_range=self.delay_range,
+        )
+
+
+def random_layer(
+    n_source: int,
+    n_target: int,
+    density: float,
+    delay_range: int,
+    *,
+    seed: int,
+    inhibitory_fraction: float = 0.2,
+    delay_granularity: str = "source",
+    name: str = "layer",
+) -> SNNLayer:
+    """Generate a random layer like the paper's dataset generator (§IV-A).
+
+    Bernoulli(density) connectivity, int8-representable weights in
+    [-128, 127] \\ {0}, uniform delays in [1, delay_range].
+
+    ``delay_granularity``:
+
+    * ``"source"`` (default) — axonal delays: all synapses of one source
+      neuron share a delay.  This is the reading under which the paper's
+      weight-delay-map stays ~1 B/synapse independent of delay range and
+      the parallel paradigm wins the broad region Fig 3 shows (DESIGN.md §2).
+    * ``"synapse"`` — per-synapse delays (the fully general sPyNNaker row
+      format; supported end-to-end and used as an ablation).
+    """
+    if delay_granularity not in ("source", "synapse"):
+        raise ValueError(delay_granularity)
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n_source, n_target)) < density
+    mag = rng.integers(1, 128, size=(n_source, n_target)).astype(np.float64)
+    sign = np.where(rng.random((n_source, n_target)) < inhibitory_fraction, -1.0, 1.0)
+    weights = np.where(mask, mag * sign, 0.0)
+    if delay_granularity == "source":
+        per_src = rng.integers(1, delay_range + 1, size=(n_source, 1))
+        delays = np.broadcast_to(per_src, (n_source, n_target)).copy()
+    else:
+        delays = rng.integers(1, delay_range + 1, size=(n_source, n_target))
+    delays = np.where(mask, delays, 1)
+    return SNNLayer(weights=weights, delays=delays, delay_range=delay_range, name=name)
+
+
+@dataclasses.dataclass
+class SNNNetwork:
+    """Application graph: a feed-forward chain of projections.
+
+    (The paper's evaluation networks — the 16 k dataset layers and the
+    2048-20-4 gesture model — are feed-forward chains; recurrent edges
+    would be additional projections onto the same machinery.)
+    """
+
+    layers: list
+    name: str = "snn"
+
+    @property
+    def layer_sizes(self) -> list:
+        sizes = [self.layers[0].n_source]
+        sizes += [l.n_target for l in self.layers]
+        return sizes
+
+    def characters(self) -> list:
+        return [l.character() for l in self.layers]
+
+
+def feedforward_network(
+    sizes: list,
+    density: float,
+    delay_range: int,
+    *,
+    seed: int = 0,
+    name: str = "snn",
+) -> SNNNetwork:
+    layers = [
+        random_layer(
+            sizes[i], sizes[i + 1], density, delay_range,
+            seed=seed + i, name=f"{name}.l{i}",
+        )
+        for i in range(len(sizes) - 1)
+    ]
+    return SNNNetwork(layers=layers, name=name)

@@ -1,0 +1,11 @@
+from .reference import LIFState, init_state, run_reference
+from .serial_runtime import SerialExecutable, lower_serial, run_serial
+from .parallel_runtime import ParallelExecutable, lower_parallel, run_parallel
+
+__all__ = [
+    "run_network",
+    "LIFState", "init_state", "run_reference",
+    "SerialExecutable", "lower_serial", "run_serial",
+    "ParallelExecutable", "lower_parallel", "run_parallel",
+]
+from .network import run_network

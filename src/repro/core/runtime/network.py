@@ -1,0 +1,46 @@
+"""Network-level inference through the switching system.
+
+Runs a compiled :class:`~repro.core.switching.CompileReport` end-to-end:
+each layer executes under the paradigm the switching system chose for it
+(serial -> event-driven gather path, parallel -> MXU matmul path), layer
+outputs cascade as the next layer's input spikes within a timestep.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from ..layer import SNNNetwork
+from ..parallel_compiler import ParallelProgram
+from ..serial_compiler import SerialProgram
+from ..switching import CompileReport
+from .parallel_runtime import run_parallel
+from .serial_runtime import run_serial
+
+
+def run_network(
+    net: SNNNetwork,
+    report: CompileReport,
+    spikes: np.ndarray,          # (T, B, n_input) 0/1
+    *,
+    interpret: bool | None = None,
+) -> List[np.ndarray]:
+    """Returns the per-layer spike trains [(T, B, n_l) ...]."""
+    if len(report.layers) != len(net.layers):
+        raise ValueError("report does not match network")
+    outs = []
+    x = spikes
+    for layer, compiled in zip(net.layers, report.layers):
+        prog = compiled.program
+        if isinstance(prog, SerialProgram):
+            z = run_serial(layer, x, layer.lif, program=prog)
+        elif isinstance(prog, ParallelProgram):
+            z = run_parallel(
+                layer, x, layer.lif, program=prog, interpret=interpret
+            )
+        else:  # pragma: no cover
+            raise TypeError(type(prog))
+        outs.append(z)
+        x = z
+    return outs

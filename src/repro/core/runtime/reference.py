@@ -1,0 +1,103 @@
+"""Dense LIF oracle — the executable semantics both paradigms must match.
+
+Eq. (1) of the paper:
+
+    V_i^{t+1} = sum_j W_ji * x_j^{t - d(j,i)} + alpha * V_i^t - z_i^t * V_th
+    z_i^t     = H(V_i^t - V_th)          (Heaviside; subtractive reset)
+
+Delays d >= 1.  A ring buffer of ``delay_range + 1`` slots holds future
+input currents: the contribution of a spike at time t through a synapse of
+delay d lands in slot (t + d), which is consumed when computing V^{t+d+1}.
+
+All weights are int8-magnitude integers, so every accumulation is exact in
+float32 and the three executors (reference / serial / parallel) agree
+bit-for-bit on the spike trains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..layer import LIFParams, SNNLayer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LIFState:
+    """Per-layer runtime state (batch leading)."""
+
+    v: jnp.ndarray       # (B, n_target) membrane potential
+    z: jnp.ndarray       # (B, n_target) last spike flags (float 0/1)
+    ring: jnp.ndarray    # (D+1, B, n_target) future input currents
+
+
+def init_state(batch: int, n_target: int, delay_range: int) -> LIFState:
+    d = delay_range + 1
+    return LIFState(
+        v=jnp.zeros((batch, n_target), jnp.float32),
+        z=jnp.zeros((batch, n_target), jnp.float32),
+        ring=jnp.zeros((d, batch, n_target), jnp.float32),
+    )
+
+
+def delay_stacked_weights(layer: SNNLayer) -> np.ndarray:
+    """(delay_range, n_source, n_target) float32: slice d-1 holds delay-d weights."""
+    out = np.zeros((layer.delay_range, layer.n_source, layer.n_target), np.float32)
+    conn = layer.connectivity()
+    for d in range(1, layer.delay_range + 1):
+        m = conn & (layer.delays == d)
+        out[d - 1][m] = layer.weights[m]
+    return out
+
+
+@partial(jax.jit, static_argnames=("delay_range",))
+def reference_step(
+    w_delay: jnp.ndarray,     # (D, S, T) dense per-delay weights
+    state: LIFState,
+    x_t: jnp.ndarray,         # (B, S) input spikes at time t (0/1 float)
+    t: jnp.ndarray,           # scalar int32 timestep
+    *,
+    delay_range: int,
+    alpha: float = 0.9,
+    v_th: float = 1.0,
+) -> tuple:
+    d_slots = delay_range + 1
+    # 1. route spikes to future slots:  ring[(t+d) % slots] += x_t @ W_d
+    contrib = jnp.einsum("bs,dst->dbt", x_t, w_delay)        # (D, B, T)
+    slot_idx = (t + 1 + jnp.arange(delay_range)) % d_slots   # d = 1..D
+    ring = state.ring.at[slot_idx].add(contrib)
+    # 2. consume the current slot
+    i_t = ring[t % d_slots]
+    ring = ring.at[t % d_slots].set(0.0)
+    # 3. Eq. (1)
+    v_new = i_t + alpha * state.v - state.z * v_th
+    z_new = (v_new >= v_th).astype(jnp.float32)
+    return LIFState(v=v_new, z=z_new, ring=ring), z_new
+
+
+def run_reference(
+    layer: SNNLayer,
+    spikes: np.ndarray,        # (T, B, n_source) 0/1
+    lif: LIFParams | None = None,
+) -> np.ndarray:
+    """Run the oracle over a spike train; returns (T, B, n_target) spikes."""
+    lif = lif or layer.lif
+    w_delay = jnp.asarray(delay_stacked_weights(layer))
+    T, B, _ = spikes.shape
+    state = init_state(B, layer.n_target, layer.delay_range)
+
+    def step(carry, inp):
+        state, t = carry
+        x_t = inp
+        state, z = reference_step(
+            w_delay, state, x_t, t,
+            delay_range=layer.delay_range, alpha=lif.alpha, v_th=lif.v_th,
+        )
+        return (state, t + 1), z
+
+    (_, _), zs = jax.lax.scan(step, (state, jnp.int32(0)), jnp.asarray(spikes, jnp.float32))
+    return np.asarray(zs)

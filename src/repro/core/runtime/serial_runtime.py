@@ -1,0 +1,120 @@
+"""Serial-paradigm executor — event-driven semantics on the VPU path.
+
+Walks the *compiled* serial artifacts exactly as the ARM core does
+(paper §III-A): a spike from source j unlocks the master-population-table
+entry, which points at j's address-list row, which points at j's block of
+packed 32-bit synaptic rows; each row's weight is accumulated into the
+synaptic input buffer slot selected by (delay, synapse type).
+
+The TPU adaptation (DESIGN.md §2) expresses the same event-driven gather as
+a data-parallel masked gather + segment-sum: per synaptic row r,
+``contribution[r] = weight[r] * x_t[src[r]]`` scattered into the
+(delay-slot, target) ring — identical arithmetic, identical spike trains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..layer import LIFParams, SNNLayer
+from ..serial_compiler import SerialProgram, compile_serial, unpack_rows
+from .reference import LIFState, init_state
+
+
+@dataclasses.dataclass
+class SerialExecutable:
+    """Flattened row arrays across all machine-graph cells."""
+
+    n_source: int
+    n_target: int
+    delay_range: int
+    row_weight: jnp.ndarray   # (R,) f32 signed weight
+    row_delay: jnp.ndarray    # (R,) i32 in [1, D]
+    row_src: jnp.ndarray      # (R,) i32 global source index
+    row_tgt: jnp.ndarray      # (R,) i32 global target index
+    lif: LIFParams
+
+
+def lower_serial(program: SerialProgram, lif: LIFParams | None = None) -> SerialExecutable:
+    """Decode packed rows of every cell into flat gather arrays."""
+    ws, ds_, ss, ts = [], [], [], []
+    for cell in program.cells:
+        w, d, tgt_local = unpack_rows(cell.synaptic_rows)
+        # reconstruct each row's source neuron from the address list
+        row_start, row_len = cell.address_list[:, 0], cell.address_list[:, 1]
+        src_local = np.repeat(np.arange(cell.src_size), row_len)
+        ws.append(w)
+        ds_.append(d)
+        ss.append(src_local + cell.src_start)
+        ts.append(tgt_local + cell.tgt_start)
+    cat = lambda a, dt: jnp.asarray(np.concatenate(a) if a else np.zeros(0), dt)
+    return SerialExecutable(
+        n_source=program.n_source,
+        n_target=program.n_target,
+        delay_range=program.delay_range,
+        row_weight=cat(ws, jnp.float32),
+        row_delay=cat(ds_, jnp.int32),
+        row_src=cat(ss, jnp.int32),
+        row_tgt=cat(ts, jnp.int32),
+        lif=lif or LIFParams(),
+    )
+
+
+@partial(jax.jit, static_argnames=("delay_range", "n_target"))
+def serial_step(
+    exe_weight, exe_delay, exe_src, exe_tgt,
+    state: LIFState,
+    x_t: jnp.ndarray,    # (B, S)
+    t: jnp.ndarray,
+    *,
+    delay_range: int,
+    n_target: int,
+    alpha: float,
+    v_th: float,
+):
+    d_slots = delay_range + 1
+    # event-driven gather: row fires iff its source spiked this timestep
+    fired = x_t[:, exe_src]                      # (B, R)
+    contrib = fired * exe_weight[None, :]        # (B, R)
+    slot = (t + exe_delay) % d_slots             # (R,)
+    seg = slot * n_target + exe_tgt              # (R,) ring-flat segment ids
+    updates = jax.vmap(
+        lambda c: jax.ops.segment_sum(c, seg, num_segments=d_slots * n_target)
+    )(contrib)                                   # (B, slots*T)
+    ring = state.ring + updates.reshape(-1, d_slots, n_target).transpose(1, 0, 2)
+    i_t = ring[t % d_slots]
+    ring = ring.at[t % d_slots].set(0.0)
+    v_new = i_t + alpha * state.v - state.z * v_th
+    z_new = (v_new >= v_th).astype(jnp.float32)
+    return LIFState(v=v_new, z=z_new, ring=ring), z_new
+
+
+def run_serial(
+    layer: SNNLayer,
+    spikes: np.ndarray,
+    lif: LIFParams | None = None,
+    program: SerialProgram | None = None,
+) -> np.ndarray:
+    program = program or compile_serial(layer)
+    exe = lower_serial(program, lif or layer.lif)
+    T, B, _ = spikes.shape
+    state = init_state(B, exe.n_target, exe.delay_range)
+
+    def step(carry, x_t):
+        state, t = carry
+        state, z = serial_step(
+            exe.row_weight, exe.row_delay, exe.row_src, exe.row_tgt,
+            state, x_t, t,
+            delay_range=exe.delay_range, n_target=exe.n_target,
+            alpha=exe.lif.alpha, v_th=exe.lif.v_th,
+        )
+        return (state, t + 1), z
+
+    (_, _), zs = jax.lax.scan(
+        step, (state, jnp.int32(0)), jnp.asarray(spikes, jnp.float32)
+    )
+    return np.asarray(zs)

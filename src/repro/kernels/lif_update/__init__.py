@@ -1,0 +1,1 @@
+from .ops import lif_update, lif_update_ref

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: fused LIF decay + integrate + fire + subtractive reset.
+
+One VMEM round-trip for the whole neural-update stage (the serial paradigm's
+"time-triggered neural update", paper §III-A): on the ARM core this is a
+per-neuron loop; on TPU it is a fused elementwise VPU kernel over
+(neurons x batch) tiles, emitting both V' and the spike flags.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lif_kernel(alpha: float, v_th: float, i_ref, v_ref, z_ref, vo_ref, zo_ref):
+    v_new = i_ref[...] + alpha * v_ref[...] - z_ref[...] * v_th
+    vo_ref[...] = v_new
+    zo_ref[...] = (v_new >= v_th).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "v_th", "bn", "bb", "interpret")
+)
+def lif_update_pallas(
+    i_t: jnp.ndarray,   # (N, B) f32
+    v: jnp.ndarray,     # (N, B) f32
+    z: jnp.ndarray,     # (N, B) f32
+    *,
+    alpha: float,
+    v_th: float,
+    bn: int = 256,
+    bb: int = 128,
+    interpret: bool = False,
+):
+    n, b = i_t.shape
+    assert n % bn == 0 and b % bb == 0, (i_t.shape, bn, bb)
+    grid = (n // bn, b // bb)
+    spec = pl.BlockSpec((bn, bb), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_lif_kernel, alpha, v_th),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, b), jnp.float32),
+            jax.ShapeDtypeStruct((n, b), jnp.float32),
+        ],
+        interpret=interpret,
+    )(i_t, v, z)

@@ -1,0 +1,40 @@
+"""jit'd public wrapper for the fused LIF update."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lif_update_pallas
+from .ref import lif_update_ref
+
+
+def lif_update(
+    i_t: jnp.ndarray,
+    v: jnp.ndarray,
+    z: jnp.ndarray,
+    *,
+    alpha: float,
+    v_th: float,
+    bn: int = 256,
+    bb: int = 128,
+    interpret: bool | None = None,
+):
+    """Fused V' = I + alpha*V - z*V_th; z' = V' >= V_th.  (N, B) f32 maps."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, b = i_t.shape
+    bn_eff = min(bn, n) if n % min(bn, n) == 0 else n
+    pn = (-n) % bn_eff
+    bb_eff = min(bb, b) if b % min(bb, b) == 0 else b
+    pb = (-b) % bb_eff
+    if pn or pb:
+        pad = lambda x: jnp.pad(x, ((0, pn), (0, pb)))
+        i_t, v, z = pad(i_t), pad(v), pad(z)
+    v_new, z_new = lif_update_pallas(
+        i_t, v, z, alpha=alpha, v_th=v_th, bn=bn_eff, bb=bb_eff,
+        interpret=interpret,
+    )
+    return v_new[:n, :b], z_new[:n, :b]
+
+
+__all__ = ["lif_update", "lif_update_ref"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused LIF neural-update step (Eq. 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lif_update_ref(
+    i_t: jnp.ndarray,    # (N, B) f32 input current
+    v: jnp.ndarray,      # (N, B) f32 membrane potential
+    z: jnp.ndarray,      # (N, B) f32 previous spikes (0/1)
+    *,
+    alpha: float,
+    v_th: float,
+):
+    v_new = i_t + alpha * v - z * v_th
+    z_new = (v_new >= v_th).astype(jnp.float32)
+    return v_new, z_new

@@ -1,0 +1,1 @@
+from .ops import spike_wdm_matmul, spike_wdm_matmul_ref

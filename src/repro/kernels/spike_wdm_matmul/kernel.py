@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: int8 WDM x int8 stacked-spike matmul -> int32.
+
+Hardware adaptation (DESIGN.md §2): SpiNNaker2's MAC array consumes 4x16
+tiles of 8-bit operands with 32-bit accumulation.  The TPU analogue is the
+MXU: we tile (targets x columns x batch) as (bm x bk x bn) VMEM blocks with
+MXU-aligned 128-multiples and accumulate int8 x int8 -> int32 partial
+products over the K grid axis, revisiting the output block (the canonical
+Pallas reduction layout).  int8 matmuls run at 2x bf16 throughput on v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, x_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    x = x_ref[...]
+    o_ref[...] += jax.lax.dot_general(
+        a, x,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def spike_wdm_matmul_pallas(
+    wdm: jnp.ndarray,       # (M, K) int8, M % bm == 0, K % bk == 0
+    stacked: jnp.ndarray,   # (K, N) int8, N % bn == 0
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, k = wdm.shape
+    k2, n = stacked.shape
+    assert k == k2, (wdm.shape, stacked.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"pad operands to tiles first: {(m, k, n)} vs {(bm, bk, bn)}"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(wdm, stacked)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the stacked-spike x weight-delay-map matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spike_wdm_matmul_ref(wdm: jnp.ndarray, stacked: jnp.ndarray) -> jnp.ndarray:
+    """int8 (M, K) @ int8 (K, N) -> int32 (M, N).
+
+    ``wdm``     — optimized weight-delay-map (targets x stacked columns).
+    ``stacked`` — stacked input buffer (columns x batch), 0/1 spikes.
+    """
+    if wdm.dtype != jnp.int8 or stacked.dtype != jnp.int8:
+        raise TypeError("operands must be int8 (SpiNNaker2 MAC operand precision)")
+    return jnp.dot(
+        wdm.astype(jnp.int32), stacked.astype(jnp.int32)
+    ).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from .ops import ssd_chunk, ssd_chunk_ref

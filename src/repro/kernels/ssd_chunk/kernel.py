@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk block (state-space duality).
+
+The SSD insight: within a chunk the selective-SSM recurrence equals a
+masked attention-like matmul, so the MXU can execute it directly.  Per
+(head) grid cell the kernel fuses:
+
+    scores = (C B^T) .* exp(segsum(la))         (Q x Q, lower-tri)
+    Y      = scores @ X                          (Q x P)
+    S      = (B .* dec_to_end)^T @ X             (N x P, chunk state)
+
+VMEM working set per cell: Q*(2N+2P) + Q^2 floats — for the mamba2-130m
+config (Q=256 chunk, N=128 state, P=64 head dim) about 0.6 MB, far inside
+v5e VMEM; Q and N are 128-multiples so both matmuls are MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, la_ref, y_ref, s_ref):
+    x = x_ref[...][:, 0, :]          # (Q, P)
+    b = b_ref[...][:, 0, :]          # (Q, N)
+    c = c_ref[...][:, 0, :]          # (Q, N)
+    la = la_ref[...][:, 0]           # (Q,)
+    q = x.shape[0]
+    cs = jnp.cumsum(la)              # (Q,)
+    diff = cs[:, None] - cs[None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=jnp.bool_))
+    lmat = jnp.where(mask, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * lmat                          # (Q, Q)
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                 # (Q, P)
+    dec = jnp.exp(cs[-1] - cs)        # (Q,)
+    bw = b * dec[:, None]
+    state = jax.lax.dot_general(
+        bw, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                 # (N, P)
+    y_ref[...] = y[:, None, :]
+    s_ref[...] = state[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(
+    x: jnp.ndarray,    # (Q, H, P) f32
+    b: jnp.ndarray,    # (Q, H, N) f32
+    c: jnp.ndarray,    # (Q, H, N) f32
+    la: jnp.ndarray,   # (Q, H) f32 log decays
+    *,
+    interpret: bool = False,
+):
+    qlen, h, p = x.shape
+    n = b.shape[-1]
+    grid = (h,)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qlen, 1, p), lambda hh: (0, hh, 0)),
+            pl.BlockSpec((qlen, 1, n), lambda hh: (0, hh, 0)),
+            pl.BlockSpec((qlen, 1, n), lambda hh: (0, hh, 0)),
+            pl.BlockSpec((qlen, 1), lambda hh: (0, hh)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qlen, 1, p), lambda hh: (0, hh, 0)),
+            pl.BlockSpec((1, n, p), lambda hh: (hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qlen, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, b, c, la)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Mamba-2 SSD intra-chunk kernel.
+
+One chunk of the state-space-duality computation (arXiv 2405.21060 §6):
+given per-step log-decays, the intra-chunk output is a masked
+attention-like matmul
+
+    Y[q, h, p] = sum_{j<=q} C[q,h,:].B[j,h,:] * exp(cs[q,h]-cs[j,h]) * X[j,h,p]
+
+plus the chunk's contribution to the inter-chunk state
+
+    S[h, n, p] = sum_j B[j,h,n] * exp(cs[last,h]-cs[j,h]) * X[j,h,p].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, b, c, la):
+    """x: (Q, H, P) f32 pre-scaled inputs (x*dt); b, c: (Q, H, N);
+    la: (Q, H) per-step log decay (<= 0).  Returns (y (Q,H,P), state (H,N,P))."""
+    q, h, p = x.shape
+    cs = jnp.cumsum(la, axis=0)                          # (Q, H)
+    diff = cs[:, None, :] - cs[None, :, :]               # (Q, Q, H) cs_i - cs_j
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(mask[:, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("ihn,jhn->ijh", c, b) * lmat     # (Q, Q, H)
+    y = jnp.einsum("ijh,jhp->ihp", scores, x)
+    dec_to_end = jnp.exp(cs[-1][None] - cs)              # (Q, H)
+    state = jnp.einsum("jhn,jh,jhp->hnp", b, dec_to_end, x)
+    return y, state

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Optional extra flags (sweep throughput on CPU hosts), e.g.
+# REPRO_XLA_EXTRA="--xla_backend_optimization_level=0".
+if os.environ.get("REPRO_XLA_EXTRA"):
+    os.environ["XLA_FLAGS"] += " " + os.environ["REPRO_XLA_EXTRA"]
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell.
+
+For each cell this script
+
+1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+2. assembles ShapeDtypeStruct inputs (zero allocation),
+3. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``,
+4. prints ``memory_analysis()`` (fits-in-HBM proof) and ``cost_analysis()``,
+5. extracts the three roofline terms (launch/roofline.py) and appends the
+   cell record to a JSON results file consumed by EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh multi --out results.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_NAMES, get_config
+from ..distributed.sharding import make_rules, sharding_ctx
+from ..models import init as minit
+from ..optim import AdamWConfig, AdamWState, init_state
+from .mesh import make_production_mesh
+from .roofline import analyze
+from .shapes import SHAPES, batch_specs, cache_specs, shape_applicable, tokens_per_step
+from . import steps as S
+
+
+def _opt_state_specs(params_specs):
+    """eval_shape of AdamW state over param ShapeDtypeStructs."""
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_specs),
+        v=jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_specs),
+    )
+
+
+def cfg_fsdp(cfg):
+    return cfg.fsdp
+
+
+def _lower_and_compile(cfg, shape, mesh, rules, grad_compress=False):
+    """Shared lowering path; returns (lowered, compiled)."""
+    params_specs = jax.eval_shape(
+        lambda: minit.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    p_sh = S.param_shardings(cfg, mesh, rules)
+    b_specs = batch_specs(cfg, shape)
+    b_sh = S.batch_shardings(cfg, mesh, rules, shape)
+    info = SHAPES[shape]
+    import contextlib
+    # inside a manual-"pod" region (grad_compress), with_sharding_constraint
+    # on the concrete (Auto-typed) mesh is rejected; skip activation
+    # constraints there — GSPMD infers layouts from the param/batch args
+    ctx = (contextlib.nullcontext() if grad_compress
+           else sharding_ctx(mesh, rules))
+    with ctx:
+        if info["kind"] == "train":
+            if grad_compress:
+                step = S.make_train_step_compressed(
+                    cfg, AdamWConfig(), mesh,
+                    n_pods=mesh.shape.get("pod", 1))
+            else:
+                step = S.make_train_step(cfg, AdamWConfig())
+            o_specs = _opt_state_specs(params_specs)
+            o_sh = S.opt_shardings(cfg, mesh, rules)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None))
+            lowered = jitted.lower(params_specs, o_specs, b_specs)
+        elif info["kind"] == "prefill":
+            step = S.make_prefill_step(cfg, info["seq_len"])
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=(None, S.cache_shardings(cfg, mesh, rules, shape)))
+            lowered = jitted.lower(params_specs, b_specs)
+        else:
+            step = S.make_serve_step(cfg, info["seq_len"])
+            c_specs = cache_specs(cfg, shape)
+            c_sh = S.cache_shardings(cfg, mesh, rules, shape)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh["tokens"], None),
+                             out_shardings=(None, c_sh))
+            lowered = jitted.lower(params_specs, c_specs, b_specs["tokens"],
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+    return lowered, lowered.compile()
+
+
+def extrapolated_terms(cfg, shape, mesh, rules, chips):
+    """Affine-in-depth roofline terms (DESIGN.md §7).
+
+    XLA's cost_analysis counts a while-loop body ONCE, so the scanned
+    full-depth program under-reports FLOPs/bytes by ~n_layers x.  We lower
+    1-period and 2-period *unrolled* variants (no loops in either), fit
+    cost(L) = a + b*L, and evaluate at the full depth.
+    """
+    import dataclasses as dc
+    period = len(cfg.block_pattern)
+    t1, t2 = [
+        analyze(
+            _lower_and_compile(
+                dc.replace(cfg, n_layers=k * period, scan_unroll=True),
+                shape, mesh, rules,
+            )[1],
+            chips=chips,
+        )
+        for k in (1, 2)
+    ]
+    n_periods = cfg.n_layers / period
+
+    def affine(v1, v2):
+        b = v2 - v1
+        a = v1 - b
+        return a + b * n_periods
+
+    from .roofline import CollectiveStats, RooflineTerms
+    bytes_by = {
+        k: max(0, int(affine(t1.collectives.bytes_by_type[k],
+                             t2.collectives.bytes_by_type[k])))
+        for k in t1.collectives.bytes_by_type
+    }
+    count_by = {
+        k: max(0, int(affine(t1.collectives.count_by_type[k],
+                             t2.collectives.count_by_type[k])))
+        for k in t1.collectives.count_by_type
+    }
+    coll = CollectiveStats(
+        bytes_by_type=bytes_by, count_by_type=count_by,
+        ring_time_s=max(0.0, affine(t1.collectives.ring_time_s,
+                                    t2.collectives.ring_time_s)),
+    )
+    return RooflineTerms(
+        flops=max(0.0, affine(t1.flops, t2.flops)),
+        hbm_bytes=max(0.0, affine(t1.hbm_bytes, t2.hbm_bytes)),
+        collectives=coll, chips=chips,
+    )
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, seq_axis=None,
+             dispatch=None, loss_chunk=None, opt=False, fsdp=None,
+             kv_seq_shard=False, grad_compress=False, no_extrapolate=False,
+             tag=None, verbose=True) -> dict:
+    cfg = get_config(arch)
+    import dataclasses
+    if opt:
+        # the beyond-paper optimized bundle (§Perf): chunked CE, bf16
+        # attention traffic, EP-constrained MoE dispatch
+        cfg = dataclasses.replace(
+            cfg, loss_chunk=512, attn_f32=False, moe_shard_constraints=True,
+            norm_f32=False, grad_bf16=True)
+    if dispatch and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=dispatch)
+        )
+    if loss_chunk is not None:
+        cfg = dataclasses.replace(cfg, loss_chunk=loss_chunk)
+    if fsdp is not None:
+        cfg = dataclasses.replace(cfg, fsdp=fsdp)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "kind": SHAPES[shape]["kind"],
+        "variant": tag or ("opt" if (opt or kv_seq_shard or dispatch or
+                                     fsdp is not None or loss_chunk)
+                           else "baseline"),
+    }
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    rules = make_rules(fsdp=cfg.fsdp, multi_pod=multi, seq_axis=seq_axis,
+                       kv_seq_shard=kv_seq_shard)
+
+    t0 = time.time()
+    try:
+        lowered, compiled = _lower_and_compile(cfg, shape, mesh, rules,
+                                                grad_compress=grad_compress)
+        t_compile = time.time() - t0
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        return rec
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+
+    raw = analyze(compiled, chips=chips)
+    if no_extrapolate:
+        # compile-proof only (multi-pod pass): roofline terms are reported
+        # from the single-pod sweep per DESIGN.md §7
+        terms = raw
+        rec["terms_source"] = "raw_scan_body (no_extrapolate)"
+    else:
+        try:
+            terms = extrapolated_terms(cfg, shape, mesh, rules, chips)
+            rec["terms_source"] = "affine_extrapolation"
+        except Exception as e:
+            terms = raw
+            rec["terms_source"] = f"raw_scan_body (extrapolation failed: {e})"
+    rec["raw_scan_flops"] = raw.flops
+    toks = tokens_per_step(cfg, shape)
+    n_active = cfg.active_param_count()
+    mf_mult = 6.0 if SHAPES[shape]["kind"] == "train" else 2.0
+    model_flops = mf_mult * n_active * toks
+    flops_ratio = (
+        model_flops / chips / terms.flops if terms.flops else 0.0
+    )
+    rec.update(
+        status="ok",
+        chips=chips,
+        compile_s=round(t_compile, 1),
+        memory_analysis=mem,
+        tokens_per_step=toks,
+        active_params=n_active,
+        model_flops=model_flops,
+        model_flops_ratio=flops_ratio,
+        **terms.to_dict(),
+    )
+    if verbose:
+        print(f"[{arch} x {shape} x {mesh_kind}] compile ok "
+              f"({rec['compile_s']}s); dominant={rec['dominant']}; "
+              f"compute={rec['compute_s']:.3e}s memory={rec['memory_s']:.3e}s "
+              f"collective={rec['collective_s']:.3e}s; "
+              f"useful-flops-ratio={flops_ratio:.2f}")
+        print("  memory_analysis:", mem)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true", help="sweep all cells")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    ap.add_argument("--seq-axis", default=None,
+                    help="shard seq dim of activations over this mesh axis (SP)")
+    ap.add_argument("--dispatch", default=None, choices=("sort", "onehot", "local"),
+                    help="override MoE dispatch path")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the beyond-paper optimized bundle (§Perf)")
+    ap.add_argument("--fsdp", type=int, default=None, choices=(0, 1),
+                    help="override the arch's FSDP setting")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the affine-depth compiles (compile-proof only)")
+    ap.add_argument("--kv-seq-shard", action="store_true",
+                    help="shard decode KV caches over model on the seq dim "
+                         "(flash-decoding split-K layout, §Perf H6)")
+    ap.add_argument("--loss-chunk", type=int, default=None,
+                    help="chunked cross-entropy block size (§Perf H1)")
+    ap.add_argument("--tag", default=None, help="variant label in the record")
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="int8 ppermute-ring gradient sync across pods "
+                         "(multi mesh; §Perf H9)")
+    args = ap.parse_args()
+
+    cells = (
+        [(a, s) for a in ARCH_NAMES for s in SHAPES]
+        if args.all else [(args.arch, args.shape)]
+    )
+    records = []
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.mesh, seq_axis=args.seq_axis,
+                       dispatch=args.dispatch, opt=args.opt,
+                       fsdp=None if args.fsdp is None else bool(args.fsdp),
+                       kv_seq_shard=args.kv_seq_shard,
+                       loss_chunk=args.loss_chunk, tag=args.tag,
+                       grad_compress=args.grad_compress,
+                       no_extrapolate=args.no_extrapolate)
+        records.append(rec)
+        if rec["status"] == "error":
+            print(f"[{arch} x {shape} x {args.mesh}] ERROR: {rec['error']}")
+        elif rec["status"] == "skipped":
+            print(f"[{arch} x {shape} x {args.mesh}] SKIP: {rec['reason'][:70]}")
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §7).
+
+Three terms per (arch x shape x mesh) cell, TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = sum over collective ops of ring-model time on 50 GB/s links
+
+``cost_analysis()`` provides FLOPs/bytes; collective bytes are NOT in it, so
+``collective_bytes_from_hlo`` parses the post-SPMD optimized HLO text and
+sums result-shape bytes per collective op with the ring factor:
+
+    all-reduce          2 (n-1)/n x bytes     (reduce-scatter + all-gather)
+    all-gather            (n-1)/n x bytes     (bytes = gathered output)
+    reduce-scatter        (n-1)   x bytes     (bytes = scattered output)
+    all-to-all            (n-1)/n x bytes
+    collective-permute          1 x bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from ..core.hw import TPUv5eConfig, DEFAULT_TPU
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# result shapes of an HLO instruction: "bf16[8,512]{1,0}" (possibly a tuple)
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_type: Dict[str, int]
+    count_by_type: Dict[str, int]
+    ring_time_s: float
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_type.values())
+
+
+def _ring_factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def collective_bytes_from_hlo(
+    hlo_text: str, *, link_bw: float = DEFAULT_TPU.ici_link_bandwidth,
+    default_group: int = 16,
+) -> CollectiveStats:
+    bytes_by: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    count_by: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    time_s = 0.0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("//"):
+            continue
+        op = None
+        for c in _COLLECTIVES:
+            # match the op position: "= <shape> all-reduce(" or "-start("
+            if f" {c}(" in stripped or f" {c}-start(" in stripped:
+                op = c
+                break
+        if op is None:
+            continue
+        lhs = stripped.split(f" {op}")[0]
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        if total == 0:
+            continue
+        m = _GROUPS_RE.search(stripped)
+        if m:
+            n = len(m.group(1).split(","))
+        else:
+            m2 = _GROUPS_IOTA_RE.search(stripped)
+            n = int(m2.group(2)) if m2 else default_group
+        bytes_by[op] += total
+        count_by[op] += 1
+        time_s += total * _ring_factor(op, n) / link_bw
+    return CollectiveStats(bytes_by, count_by, time_s)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    collectives: CollectiveStats
+    chips: int
+    hw: TPUv5eConfig = dataclasses.field(default_factory=TPUv5eConfig)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.hw.peak_flops_bf16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.hw.hbm_bandwidth
+
+    @property
+    def collective_s(self) -> float:
+        return self.collectives.ring_time_s
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """compute_term / bound — fraction of peak the dominant term allows."""
+        if self.bound_s == 0:
+            return 0.0
+        return self.compute_s / self.bound_s
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes": self.collectives.bytes_by_type,
+            "collective_counts": self.collectives.count_by_type,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction(),
+        }
+
+
+def analyze(compiled, *, chips: int, lowered_text: Optional[str] = None) -> RooflineTerms:
+    """Extract the three terms from a compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = lowered_text if lowered_text is not None else compiled.as_text()
+    coll = collective_bytes_from_hlo(text)
+    return RooflineTerms(flops=flops, hbm_bytes=hbm, collectives=coll, chips=chips)

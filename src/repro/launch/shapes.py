@@ -1,0 +1,87 @@
+"""Assigned input shapes and per-(arch x shape) input_specs.
+
+LM transformer shapes (seq_len x global_batch):
+
+* train_4k     — 4,096 x 256   (training;   lowers train_step)
+* prefill_32k  — 32,768 x 32   (inference;  lowers prefill_step)
+* decode_32k   — 32,768 x 128  (inference;  lowers serve_step: ONE new token
+                                against a seq_len KV cache)
+* long_500k    — 524,288 x 1   (long-context decode; sub-quadratic archs only)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — shardable,
+zero allocation (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def kind(self) -> str:
+        return SHAPES[self.shape]["kind"]
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Optional[str]:
+    """None if runnable; else the skip reason (recorded in EXPERIMENTS.md)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "pure full-attention arch: 524k-token decode KV cache is the "
+            "quadratic-family artifact this shape excludes (DESIGN.md §5)"
+        )
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    info = SHAPES[shape]
+    s, b = info["seq_len"], info["global_batch"]
+    kind = info["kind"]
+    if kind == "decode":
+        return {"tokens": _sds((b, 1), jnp.int32)}
+    if cfg.frontend == "audio":
+        return {
+            "embeds": _sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype)),
+            "labels": _sds((b, s), jnp.int32),
+        }
+    specs = {"tokens": _sds((b, s - cfg.n_frontend_tokens), jnp.int32)}
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = _sds(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        specs["labels"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: str):
+    info = SHAPES[shape]
+    s, b = info["seq_len"], info["global_batch"]
+    return jax.eval_shape(lambda: M.init_caches(cfg, b, s))
+
+
+def tokens_per_step(cfg: ModelConfig, shape: str) -> int:
+    info = SHAPES[shape]
+    if info["kind"] == "decode":
+        return info["global_batch"]          # one new token per sequence
+    return info["global_batch"] * info["seq_len"]

@@ -1,0 +1,575 @@
+"""Block forwards: GQA attention, SwiGLU/GELU MLP, MoE, Mamba-2 SSD, RG-LRU.
+
+Pure functions over param dicts.  Three modes share one code path per block:
+
+* train   — full sequence, no cache
+* prefill — full sequence, returns the decode cache
+* decode  — one new token against the cache
+
+Attention is computed in Q-blocks (streamed over the query axis) so the
+(B, H, S, S) score tensor is never materialized — required for the 32k
+prefill cells to fit HBM in the dry-run (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+f32 = jnp.float32
+
+
+def rms_norm(x, w, eps=1e-6, f32_stats=True):
+    """f32_stats=True (baseline) upcasts x to f32 — XLA then carries the
+    whole residual-gradient chain (and its all-reduces) in f32.  False
+    keeps x in bf16 and accumulates only the variance in f32 (§Perf H7):
+    activation-grad collectives halve."""
+    if f32_stats:
+        var = jnp.mean(jnp.square(x.astype(f32)), axis=-1, keepdims=True)
+        return (x.astype(f32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+    var = jnp.sum(jnp.square(x), axis=-1, keepdims=True,
+                  dtype=f32) / x.shape[-1]
+    return x * jax.lax.rsqrt(var + eps).astype(x.dtype) * w
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (S,) int."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=f32) / half))
+    ang = positions.astype(f32)[:, None] * freqs[None, :]        # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, mask, scale, *, attn_f32: bool = True):
+    """q: (B, Qb, Hq, hd); k,v: (B, Skv, Hkv, hd); mask: (Qb, Skv) bool.
+
+    attn_f32=True (baseline) casts operands to f32; False keeps bf16
+    operands with f32 MXU accumulation (preferred_element_type) — same
+    FLOPs, half the attention HBM traffic (§Perf lever H2).
+    """
+    b, qb, hq, hd = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, qb, hkv, rep, hd)
+    if attn_f32:
+        scores = jnp.einsum(
+            "bqkrd,bskd->bkrqs", qg.astype(f32), k.astype(f32)) * scale
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v.astype(f32))
+    else:
+        scores = jnp.einsum(
+            "bqkrd,bskd->bkrqs", qg, k,
+            preferred_element_type=f32) * scale
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bkrqs,bskd->bqkrd", probs.astype(q.dtype), v,
+            preferred_element_type=f32)
+    return out.reshape(b, qb, hq, hd).astype(q.dtype)
+
+
+def attention_seq(q, k, v, *, window: Optional[int], q_block: int = 512,
+                  attn_f32: bool = True):
+    """Causal (optionally windowed) attention, streamed over Q blocks.
+
+    q, k, v: (B, S, H, hd) with aligned positions 0..S-1.
+    """
+    b, s, hq, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    qb = min(q_block, s)
+    pad = (-s) % qb
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // qb
+    qs = q.reshape(b, nq, qb, hq, hd).transpose(1, 0, 2, 3, 4)  # (nq, B, qb, H, hd)
+    kv_pos = jnp.arange(s)
+
+    def do_block(qi, q_blk):
+        q_pos = qi * qb + jnp.arange(qb)
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+        return _attend_block(q_blk, k, v, mask, scale, attn_f32=attn_f32)
+
+    out = jax.lax.map(lambda args: do_block(*args), (jnp.arange(nq), qs))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * qb, hq, hd)
+    return out[:, :s]
+
+
+def attn_forward(
+    p: dict,
+    x: jnp.ndarray,                      # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    mode: str,                           # train | prefill | decode
+    pos: jnp.ndarray,                    # scalar int32: offset of x[:, 0]
+    cache: Optional[dict],
+    cache_len: int = 0,
+):
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln1"], cfg.norm_eps, cfg.norm_f32)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, cfg.norm_f32)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps, cfg.norm_f32)
+    positions = pos + jnp.arange(s)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode in ("train",):
+        out = attention_seq(q, k, v, window=cfg.attn_window,
+                            attn_f32=cfg.attn_f32)
+    elif mode == "prefill":
+        out = attention_seq(q, k, v, window=cfg.attn_window,
+                            attn_f32=cfg.attn_f32)
+        w = cfg.attn_window or cache_len
+        w = min(w, cache_len)
+        # keep the last `w` keys/values (ring starts full for s >= w)
+        ks = k[:, -w:] if s >= w else jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        vs = v[:, -w:] if s >= w else jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        new_cache = {"k": ks, "v": vs}
+    else:  # decode: s == 1
+        w = cache["k"].shape[1]
+        slot = pos % w
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        kv_pos = jnp.arange(w)
+        # ring: entry is valid if its age (0 = newest) has been written
+        age = (slot - kv_pos) % w
+        mask = (age <= jnp.minimum(pos, w - 1))[None, :]
+        scale = 1.0 / math.sqrt(hd)
+        out = _attend_block(q, ck, cv, mask, scale, attn_f32=cfg.attn_f32)
+        new_cache = {"k": ck, "v": cv}
+
+    out = out.reshape(b, s, hq * hd) @ p["wo"]
+    x = x + out
+    # FFN half of the block
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps, cfg.norm_f32)
+    ffn_p = {k2.split(".", 1)[1]: v2 for k2, v2 in p.items() if k2.startswith("ffn.")}
+    x = x + ffn_forward(ffn_p, h2, cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+def mlp_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+def moe_forward_sort(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Gather-dispatch MoE (the 'serial paradigm' analogue, DESIGN.md §5).
+
+    Sort tokens by expert, pack to per-expert capacity slots, grouped
+    matmul over stacked expert weights, weighted combine.  Static shapes.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf @ p["router"]).astype(f32)                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)             # (T, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    cap = int(math.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
+    eid = top_e.reshape(-1)                                   # (T*K,)
+    tid = jnp.repeat(jnp.arange(t), m.top_k)                  # (T*K,)
+    order = jnp.argsort(eid)                                  # stable
+    eid_s, tid_s = eid[order], tid[order]
+    # position of each routed pair within its expert
+    ones = jnp.ones_like(eid_s)
+    pos_in_e = jnp.cumsum(ones) - 1
+    e_start = jnp.searchsorted(eid_s, jnp.arange(m.n_experts))
+    pos_in_e = pos_in_e - e_start[eid_s]
+    keep = pos_in_e < cap
+    slot = eid_s * cap + jnp.where(keep, pos_in_e, 0)
+
+    buf = jnp.zeros((m.n_experts * cap, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xf[tid_s], 0))
+    xe = buf.reshape(m.n_experts, cap, d)
+    if cfg.moe_shard_constraints:
+        # §Perf lever H3: pin the dispatch/combine buffers to the expert
+        # (EP) sharding so GSPMD routes tokens with one all-to-all instead
+        # of replicating (E*cap, d) per model shard.
+        from ..distributed.sharding import constrain
+        xe = constrain(xe, ("expert", None, None))
+    hg = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    hu = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hu, p["w_down"])
+    if cfg.moe_shard_constraints:
+        from ..distributed.sharding import constrain
+        ye = constrain(ye, ("expert", None, None))
+    ye = ye.reshape(m.n_experts * cap, d)
+
+    # combine: route each kept pair's expert output back to its token
+    pair_w = top_w.reshape(-1)[order]                         # (T*K,)
+    contrib = jnp.where(keep[:, None], ye[slot] * pair_w[:, None], 0)
+    y = jnp.zeros((t, d), x.dtype).at[tid_s].add(contrib)
+    return y.reshape(b, s, d)
+
+
+def moe_forward_onehot(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Dense one-hot dispatch (the 'parallel paradigm' analogue).
+
+    Computes every expert on every token and combines with the routing
+    weights — all-matmul dataflow (MXU-friendly, zero gathers) at E/K x
+    FLOP overcount.  The per-layer paradigm switch picks this path only
+    when tokens-per-expert density makes it competitive (small E / tiny
+    experts), exactly the paper's dense-vs-sparse tradeoff.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf @ p["router"]).astype(f32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    combine = jnp.zeros((t, m.n_experts), f32)
+    combine = combine.at[jnp.arange(t)[:, None], top_e].add(top_w)
+    hg = jnp.einsum("td,edf->tef", xf, p["w_gate"])
+    hu = jnp.einsum("td,edf->tef", xf, p["w_up"])
+    ye = jnp.einsum("tef,efd->ted", jax.nn.silu(hg) * hu, p["w_down"])
+    y = jnp.einsum("ted,te->td", ye.astype(f32), combine).astype(x.dtype)
+    return y.reshape(b, s, d)
+
+
+def moe_forward_local(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """shard_map local-dispatch MoE (§Perf lever H5 — the scalable path).
+
+    The plain 'sort' path sorts tokens *globally*, which GSPMD can only
+    realize by replicating the (E*cap, d) dispatch buffers and
+    all-reducing them (6.6 TB/step on olmoe's train_4k baseline).  Here
+    each data shard routes ONLY its local tokens, each model shard
+    computes ONLY its local experts on them (token blocks are replicated
+    across the model axis, expert weights are already expert-sharded), and
+    one psum over the model axis assembles the combined output — the
+    per-layer collective drops from O(E*cap*d) all-reduces to a single
+    (T_local, d) reduction.
+
+    Falls back to the global-sort path when no sharding context is active
+    (single-host tests) — bitwise-equal semantics when nothing is dropped.
+    """
+    from ..distributed.sharding import _ctx, spec_for
+    ctx = getattr(_ctx, "v", None)
+    if ctx is None:
+        return moe_forward_sort(p, x, cfg)
+    mesh, rules = ctx
+    m = cfg.moe
+    batch_axes = tuple(a for a in rules.get("batch", ()) if a)
+    model_axes = tuple(a for a in rules.get("expert", ()) if a)
+    if not model_axes or (m.n_experts % mesh.shape[model_axes[0]] != 0):
+        return moe_forward_sort(p, x, cfg)
+    b, s, d = x.shape
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+    if b % n_batch_shards != 0:
+        batch_axes = ()
+        n_batch_shards = 1
+
+    P_ = jax.sharding.PartitionSpec
+    x_spec = P_(batch_axes if batch_axes else None, None, None)
+    ew_spec = P_(model_axes[0], None, None)
+    ewd_spec = P_(model_axes[0], None, None)
+
+    def local_block(xb, router, wg, wu, wd):
+        bl, sl, _ = xb.shape
+        t = bl * sl
+        xf = xb.reshape(t, d)
+        logits = (xf @ router).astype(f32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, m.top_k)
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+        cap = int(math.ceil(t * m.top_k / m.n_experts * m.capacity_factor))
+        eid = top_e.reshape(-1)
+        tid = jnp.repeat(jnp.arange(t), m.top_k)
+        order = jnp.argsort(eid)
+        eid_s, tid_s = eid[order], tid[order]
+        pos_in_e = jnp.cumsum(jnp.ones_like(eid_s)) - 1
+        e_start = jnp.searchsorted(eid_s, jnp.arange(m.n_experts))
+        pos_in_e = pos_in_e - e_start[eid_s]
+        # restrict to this model shard's experts
+        e_local = wg.shape[0]
+        shard = jax.lax.axis_index(model_axes[0])
+        e0 = shard * e_local
+        keep = (pos_in_e < cap) & (eid_s >= e0) & (eid_s < e0 + e_local)
+        slot = jnp.where(keep, (eid_s - e0) * cap + pos_in_e, 0)
+        buf = jnp.zeros((e_local * cap, d), xb.dtype)
+        buf = buf.at[slot].add(jnp.where(keep[:, None], xf[tid_s], 0))
+        xe = buf.reshape(e_local, cap, d)
+        hg = jnp.einsum("ecd,edf->ecf", xe, wg)
+        hu = jnp.einsum("ecd,edf->ecf", xe, wu)
+        ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hg) * hu, wd)
+        ye = ye.reshape(e_local * cap, d)
+        pair_w = top_w.reshape(-1)[order]
+        contrib = jnp.where(keep[:, None], ye[slot] * pair_w[:, None], 0)
+        y = jnp.zeros((t, d), xb.dtype).at[tid_s].add(contrib)
+        y = jax.lax.psum(y, model_axes[0])   # assemble across expert shards
+        return y.reshape(bl, sl, d)
+
+    return jax.shard_map(
+        local_block, mesh=mesh,
+        in_specs=(x_spec, P_(None, None), ew_spec, ew_spec, ewd_spec),
+        out_specs=x_spec,
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+
+def ffn_forward(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    if cfg.moe is not None:
+        if cfg.moe.dispatch == "onehot":
+            return moe_forward_onehot(p, x, cfg)
+        if cfg.moe.dispatch == "local":
+            return moe_forward_local(p, x, cfg)
+        return moe_forward_sort(p, x, cfg)
+    return mlp_forward(p, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+def _causal_depthwise_conv(u, w, b):
+    """u: (B, S, C); w: (C, K) depthwise causal conv along S."""
+    k = w.shape[1]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        up.transpose(0, 2, 1)[:, :, None, :],            # NCHW, H=1, W=S+K-1
+        w.T[None, :, None, :],                           # HWIO = (1, K, 1, C)
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+        feature_group_count=u.shape[-1],
+    )
+    return out[:, :, 0, :].transpose(0, 2, 1) + b
+
+
+def _segsum(la):
+    """Lower-triangular pairwise decay logs: out[..., i, j] = sum_{j<k<=i} la_k."""
+    q = la.shape[-1]
+    cs = jnp.cumsum(la, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_forward(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    cache: Optional[dict],
+):
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_in = s_cfg.expand * d
+    hdim = s_cfg.head_dim
+    nh = d_in // hdim
+    g, n = s_cfg.n_groups, s_cfg.d_state
+    conv_dim = d_in + 2 * g * n
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps, cfg.norm_f32)
+    proj = h @ p["in_proj"]                                # (B,S, 2*d_in + 2GN + H)
+    z, xbc, dt = jnp.split(proj, [d_in, d_in + conv_dim], axis=-1)
+
+    new_cache = {}
+    if mode == "decode":
+        conv_state = jnp.concatenate([cache["conv"], xbc.transpose(0, 2, 1)], axis=2)
+        new_cache["conv"] = conv_state[:, :, 1:]
+        xbc = jnp.einsum("bck,ck->bc", conv_state, p["conv_w"]) + p["conv_b"]
+        xbc = jax.nn.silu(xbc)[:, None, :]
+    else:
+        if mode == "prefill":
+            k = s_cfg.d_conv
+            tail = xbc.transpose(0, 2, 1)[:, :, -(k - 1):]
+            pad = (k - 1) - tail.shape[2]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (0, 0), (pad, 0)))
+            new_cache["conv"] = tail
+        xbc = jax.nn.silu(_causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"]))
+
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = xs.reshape(b, -1, nh, hdim)
+    bmat = jnp.repeat(bmat.reshape(b, -1, g, n), nh // g, axis=2)
+    cmat = jnp.repeat(cmat.reshape(b, -1, g, n), nh // g, axis=2)
+    dt = jax.nn.softplus(dt.astype(f32) + p["dt_bias"].astype(f32))  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(f32))                              # (H,)
+    la = dt * a[None, None, :]                                        # log decay
+
+    if mode == "decode":
+        h_state = cache["ssd"]                                        # (B,H,P,N)
+        dec = jnp.exp(la[:, 0, :])                                    # (B,H)
+        dbx = jnp.einsum("bh,bhn,bhp->bhpn", dt[:, 0], bmat[:, 0].astype(f32),
+                         xs[:, 0].astype(f32))
+        h_state = dec[:, :, None, None] * h_state + dbx
+        y = jnp.einsum("bhn,bhpn->bhp", cmat[:, 0].astype(f32), h_state)
+        y = y + p["D_skip"].astype(f32)[None, :, None] * xs[:, 0].astype(f32)
+        y = y.reshape(b, 1, d_in)
+        new_cache["ssd"] = h_state
+    else:
+        q = min(s_cfg.chunk, s)
+        pad = (-s) % q
+        if pad:
+            padfn = lambda u: jnp.pad(u, ((0, 0), (0, pad)) + ((0, 0),) * (u.ndim - 2))
+            xs, bmat, cmat, la, dt = map(padfn, (xs, bmat, cmat, la, dt))
+        nc = xs.shape[1] // q
+        csh = lambda u: u.reshape((b, nc, q) + u.shape[2:])
+        xc, bc, cc, lac, dtc = map(csh, (xs, bmat, cmat, la, dt))
+        xdt = xc.astype(f32) * dtc[..., None]                         # (B,C,Q,H,P)
+        lseg = _segsum(lac.transpose(0, 1, 3, 2))                     # (B,C,H,Q,Q)
+        lmat = jnp.exp(lseg)
+        y_diag = jnp.einsum(
+            "bcqhn,bcshn,bchqs,bcshp->bcqhp",
+            cc.astype(f32), bc.astype(f32), lmat, xdt,
+        )
+        cs = jnp.cumsum(lac, axis=2)                                  # (B,C,Q,H)
+        dec_to_end = jnp.exp(cs[:, :, -1:, :] - cs)                   # (B,C,Q,H)
+        states = jnp.einsum(
+            "bcqhn,bcqh,bcqhp->bchnp", bc.astype(f32), dec_to_end, xdt
+        )
+        chunk_dec = jnp.exp(cs[:, :, -1, :])                          # (B,C,H)
+
+        def scan_fn(hprev, inp):
+            st, dec = inp
+            hnew = dec[:, :, None, None] * hprev + st
+            return hnew, hprev
+
+        init = (
+            cache["ssd"].transpose(0, 1, 3, 2)  # (B,H,N,P)
+            if (mode == "decode" or (cache and "ssd" in cache))
+            else jnp.zeros((b, nh, n, hdim), f32)
+        )
+        hlast, hprevs = jax.lax.scan(
+            scan_fn,
+            init,
+            (states.transpose(1, 0, 2, 3, 4), chunk_dec.transpose(1, 0, 2)),
+        )
+        hprevs = hprevs.transpose(1, 0, 2, 3, 4)                      # (B,C,H,N,P)
+        dec_from_start = jnp.exp(cs)                                  # (B,C,Q,H)
+        y_off = jnp.einsum(
+            "bcqhn,bchnp,bcqh->bcqhp", cc.astype(f32), hprevs, dec_from_start
+        )
+        y = (y_diag + y_off).reshape(b, nc * q, nh, hdim)[:, :s]
+        y = y + p["D_skip"].astype(f32)[None, None, :, None] * xs[:, :s].astype(f32)
+        y = y.reshape(b, s, d_in)
+        if mode == "prefill":
+            new_cache["ssd"] = hlast.transpose(0, 1, 3, 2)            # (B,H,P,N)
+
+    y = rms_norm(y * jax.nn.silu(z[:, : y.shape[1]].astype(f32)), p["gn"], cfg.norm_eps, cfg.norm_f32)
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return x + out, (new_cache or None)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def rglru_forward(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    cache: Optional[dict],
+):
+    b, s, d = x.shape
+    r = cfg.rglru.d_rnn or d
+    c_const = cfg.rglru.c
+    h = rms_norm(x, p["ln1"], cfg.norm_eps, cfg.norm_f32)
+    u = h @ p["w_x"]                                   # (B,S,R)
+    g = jax.nn.gelu(h @ p["w_g"])
+
+    new_cache = {}
+    if mode == "decode":
+        conv_state = jnp.concatenate([cache["conv"], u.transpose(0, 2, 1)], axis=2)
+        new_cache["conv"] = conv_state[:, :, 1:]
+        u = (jnp.einsum("bck,ck->bc", conv_state, p["conv_w"]) + p["conv_b"])[:, None, :]
+    else:
+        if mode == "prefill":
+            k = cfg.rglru.d_conv
+            tail = u.transpose(0, 2, 1)[:, :, -(k - 1):]
+            pad = (k - 1) - tail.shape[2]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (0, 0), (pad, 0)))
+            new_cache["conv"] = tail
+        u = _causal_depthwise_conv(u, p["conv_w"], p["conv_b"])
+
+    uf = u.astype(f32)
+    rgate = jax.nn.sigmoid(p["w_a"].astype(f32) * uf + p["b_a"].astype(f32))
+    igate = jax.nn.sigmoid(p["w_i"].astype(f32) * uf + p["b_i"].astype(f32))
+    log_a = -c_const * jax.nn.softplus(p["lam"].astype(f32)) * rgate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    v = beta * (igate * uf)
+
+    if mode == "decode":
+        h_new = a[:, 0] * cache["h"] + v[:, 0]
+        hs = h_new[:, None, :]
+        new_cache["h"] = h_new
+    else:
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a, v), axis=1)
+        if cache is not None and "h" in cache:
+            hs = a_sc * cache["h"][:, None, :] + b_sc
+        else:
+            hs = b_sc
+        if mode == "prefill":
+            new_cache["h"] = hs[:, -1]
+
+    out = (hs.astype(x.dtype) * g) @ p["w_out"]
+    x = x + out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps, cfg.norm_f32)
+    ffn_p = {k2.split(".", 1)[1]: v2 for k2, v2 in p.items() if k2.startswith("ffn.")}
+    x = x + ffn_forward(ffn_p, h2, cfg)
+    return x, (new_cache or None)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def block_forward(btype: str, p, x, cfg, *, mode, pos, cache, cache_len=0):
+    if btype == "attn":
+        return attn_forward(p, x, cfg, mode=mode, pos=pos, cache=cache,
+                            cache_len=cache_len)
+    if btype == "mamba2":
+        return mamba2_forward(p, x, cfg, mode=mode, cache=cache)
+    if btype == "rglru":
+        return rglru_forward(p, x, cfg, mode=mode, cache=cache)
+    raise ValueError(btype)

@@ -1,0 +1,204 @@
+"""Model driver: train loss / prefill / decode over scanned layer groups."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .blocks import block_forward, rms_norm
+from .config import ModelConfig
+from .init import group_layers
+
+f32 = jnp.float32
+
+
+@jax.custom_vjp
+def _bf16_grad_barrier(x):
+    """Identity with a bf16 cotangent (§Perf H8).
+
+    The loss/norm f32 chain otherwise propagates f32 cotangents down the
+    whole residual stream, doubling every cross-model activation-gradient
+    all-reduce.  Inserting this between layers pins dL/dx to bf16."""
+    return x
+
+
+def _bgb_fwd(x):
+    return x, None
+
+
+def _bgb_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+_bf16_grad_barrier.defvjp(_bgb_fwd, _bgb_bwd)
+
+
+def _run_groups(params, cfg: ModelConfig, x, *, mode, pos, caches, cache_len):
+    """Scan each pattern group; returns (x, new_caches)."""
+    new_caches = []
+    for gi, (types, repeat) in enumerate(group_layers(cfg)):
+        gparams = params["groups"][gi]
+        gcache = caches[gi] if caches is not None else None
+
+        def body(x, per_layer):
+            lp, lc = per_layer
+            new_lc = []
+            for ti, bt in enumerate(types):
+                c = lc[ti] if lc is not None else None
+                x, nc = block_forward(
+                    bt, lp[ti], x, cfg,
+                    mode=mode, pos=pos, cache=c, cache_len=cache_len,
+                )
+                if cfg.grad_bf16 and mode == "train":
+                    x = _bf16_grad_barrier(x)
+                new_lc.append(nc)
+            if all(c is None for c in new_lc):
+                new_lc = None
+            return x, new_lc
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        if repeat == 1:
+            # single scan step: index the stacked leaves directly
+            lp = jax.tree.map(lambda a: a[0], gparams)
+            lc = jax.tree.map(lambda a: a[0], gcache) if gcache is not None else None
+            x, nc = body(x, (lp, lc))
+            nc = jax.tree.map(lambda a: a[None], nc) if nc is not None else None
+        else:
+            x, nc = jax.lax.scan(
+                body, x, (gparams, gcache),
+                unroll=repeat if cfg.scan_unroll else 1,
+            )
+        new_caches.append(nc)
+    return x, (new_caches if caches is not None or mode == "prefill" else None)
+
+
+def _embed(params, cfg: ModelConfig, batch):
+    """Token / frontend embedding.  Returns (x, labels_or_None)."""
+    if cfg.frontend == "audio" and "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        return x, batch.get("labels")
+    tokens = batch["tokens"]
+    x = jnp.take(params["tok_embed"], tokens, axis=0)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x, batch.get("labels")
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_f32)
+    head = params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    """Next-token cross entropy.  batch: tokens (B,S) [+labels/embeds]."""
+    x, labels = _embed(params, cfg, batch)
+    x = constrain(x, ("batch", "seq", None))
+    pos = jnp.int32(0)
+    x, _ = _run_groups(params, cfg, x, mode="train", pos=pos,
+                       caches=None, cache_len=0)
+    if labels is None:  # next-token objective from the token stream itself
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                         constant_values=-100)
+        if cfg.frontend == "vision":
+            n_front = x.shape[1] - batch["tokens"].shape[1]
+            labels = jnp.pad(labels, ((0, 0), (n_front, 0)),
+                             constant_values=-100)
+
+    def ce(x_blk, labels_blk):
+        logits = _logits(params, cfg, x_blk).astype(f32)
+        mask = labels_blk >= 0
+        safe = jnp.where(mask, labels_blk, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        return ((lse - gold) * mask).sum(), mask.sum()
+
+    s = x.shape[1]
+    if cfg.loss_chunk and cfg.loss_chunk < s and s % cfg.loss_chunk == 0:
+        # stream the CE over sequence chunks: the (B, chunk, V) f32 logits
+        # block is the only vocab-sized temp (never the full (B, S, V))
+        nc = s // cfg.loss_chunk
+        xb = x.reshape(x.shape[0], nc, cfg.loss_chunk, x.shape[-1])
+        lb = labels.reshape(labels.shape[0], nc, cfg.loss_chunk)
+
+        def step(carry, inp):
+            nll_sum, n = carry
+            xc, lc = inp
+            nll, cnt = ce(xc, lc)
+            return (nll_sum + nll, n + cnt), None
+
+        (nll_sum, n), _ = jax.lax.scan(
+            step, (jnp.float32(0.0), jnp.int32(0)),
+            (xb.transpose(1, 0, 2, 3), lb.transpose(1, 0, 2)),
+        )
+        return nll_sum / jnp.maximum(n, 1)
+    nll, cnt = ce(x, labels)
+    return nll / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch_size: int, cache_len: int):
+    """Zeroed decode caches, stacked (repeat, ...) per group."""
+    dt = jnp.dtype(cfg.dtype)
+    caches = []
+    for types, repeat in group_layers(cfg):
+        per_type = []
+        for bt in types:
+            if bt == "attn":
+                w = min(cfg.attn_window or cache_len, cache_len)
+                per_type.append({
+                    "k": jnp.zeros((repeat, batch_size, w, cfg.n_kv_heads,
+                                    cfg.head_dim), dt),
+                    "v": jnp.zeros((repeat, batch_size, w, cfg.n_kv_heads,
+                                    cfg.head_dim), dt),
+                })
+            elif bt == "mamba2":
+                s = cfg.ssm
+                d_in = s.expand * cfg.d_model
+                nh = d_in // s.head_dim
+                conv_dim = d_in + 2 * s.n_groups * s.d_state
+                per_type.append({
+                    "conv": jnp.zeros((repeat, batch_size, conv_dim,
+                                       s.d_conv - 1), dt),
+                    "ssd": jnp.zeros((repeat, batch_size, nh, s.head_dim,
+                                      s.d_state), f32),
+                })
+            elif bt == "rglru":
+                r = cfg.rglru.d_rnn or cfg.d_model
+                per_type.append({
+                    "conv": jnp.zeros((repeat, batch_size, r,
+                                       cfg.rglru.d_conv - 1), dt),
+                    "h": jnp.zeros((repeat, batch_size, r), f32),
+                })
+        caches.append(per_type)
+    return caches
+
+
+def prefill(params, cfg: ModelConfig, batch, cache_len: int):
+    """Full-sequence forward; returns (last-token logits, caches)."""
+    x, _ = _embed(params, cfg, batch)
+    x = constrain(x, ("batch", "seq", None))
+    x, caches = _run_groups(params, cfg, x, mode="prefill", pos=jnp.int32(0),
+                            caches=None, cache_len=cache_len)
+    logits = _logits(params, cfg, x[:, -1:, :])
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, caches, cache_len: int):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 position."""
+    batch = {"tokens": tokens}
+    x, _ = _embed(params, cfg, batch)
+    x, new_caches = _run_groups(params, cfg, x, mode="decode", pos=pos,
+                                caches=caches, cache_len=cache_len)
+    logits = _logits(params, cfg, x)
+    return logits, new_caches

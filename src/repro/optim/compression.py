@@ -1,0 +1,94 @@
+"""int8 gradient compression for cross-pod all-reduce.
+
+At 1000+ nodes the data-parallel gradient all-reduce over the (slow,
+inter-pod) DCI axis dominates step time for FSDP-light archs.  Standard
+trick: quantize each gradient tensor to int8 with a per-tensor scale before
+the reduce, dequantize after (error feedback optional).  This is exposed as
+a wrapper around the gradient pytree; on the single-pod mesh it is a no-op
+by default.
+
+The arithmetic is exact-roundtrip-tested in tests/test_optim.py; the
+collective-byte reduction (4x over f32, 2x over bf16) shows up directly in
+the §Roofline collective term when enabled.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedGrad(NamedTuple):
+    q: jnp.ndarray      # int8 payload
+    scale: jnp.ndarray  # f32 per-tensor scale
+
+
+def quantize(g: jnp.ndarray) -> CompressedGrad:
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return CompressedGrad(q=q, scale=scale)
+
+
+def dequantize(c: CompressedGrad) -> jnp.ndarray:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def compress_tree(grads):
+    return jax.tree.map(quantize, grads)
+
+
+def decompress_tree(ctree):
+    return jax.tree.map(
+        dequantize, ctree, is_leaf=lambda x: isinstance(x, CompressedGrad)
+    )
+
+
+def psum_compressed(grads, axis_name: str):
+    """int8 all-reduce emulation: quantize -> psum(int32) -> dequantize.
+
+    Scales are reduced with a max so dequantization is conservative; the
+    int32 accumulation avoids int8 overflow across shards.  Use inside
+    shard_map over the cross-pod axis.
+    """
+    def one(g):
+        c = quantize(g)
+        scale = jax.lax.pmax(c.scale, axis_name)
+        # requantize against the shared scale so the sum is consistent
+        q = jnp.clip(
+            jnp.round(g.astype(jnp.float32) / scale), -127, 127
+        ).astype(jnp.int32)
+        total = jax.lax.psum(q, axis_name)
+        return (total.astype(jnp.float32) * scale).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def ring_psum_int8(grads, axis_name: str, axis_size: int):
+    """All-reduce with an int8 wire format via a ppermute ring.
+
+    ``psum`` on quantized values would put int32 on the wire (worse than
+    bf16); here each of the ``axis_size - 1`` ring steps moves ONLY the
+    int8 payload (+ one f32 scale), and accumulation happens locally in
+    f32.  Wire bytes/element: (n-1) x 1B vs bf16 all-reduce's 2(n-1)/n x 2B
+    — a 4x cut at n=2 pods.  Exact for payloads whose quantization error
+    is acceptable (error-feedback left to the caller).
+    """
+    def one(g):
+        scale = jax.lax.pmax(
+            jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0,
+                        1e-12),
+            axis_name,
+        )
+        q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        total = q.astype(jnp.float32)
+        perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+        msg = q
+        for _ in range(axis_size - 1):
+            msg = jax.lax.ppermute(msg, axis_name, perm)  # int8 on the wire
+            total = total + msg.astype(jnp.float32)
+        return (total * scale).astype(g.dtype)
+
+    return jax.tree.map(one, grads)

@@ -1,0 +1,120 @@
+"""Serial & parallel compilers: partitioning, losslessness, budgets."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_S2,
+    LayerCharacter,
+    OptFlags,
+    compile_parallel,
+    compile_serial,
+    parallel_pe_count_exact,
+    random_layer,
+    serial_pe_count,
+    serial_pe_count_exact,
+)
+from repro.core.cost_model import total
+from repro.core.serial_compiler import unpack_rows
+
+
+def reconstruct_from_serial(program, n_source, n_target):
+    w = np.zeros((n_source, n_target))
+    d = np.ones((n_source, n_target), np.int64)
+    for cell in program.cells:
+        weights, delays, tgt = unpack_rows(cell.synaptic_rows)
+        src = np.repeat(
+            np.arange(cell.src_size), cell.address_list[:, 1]
+        )
+        w[src + cell.src_start, tgt + cell.tgt_start] = weights
+        d[src + cell.src_start, tgt + cell.tgt_start] = delays
+    return w, d
+
+
+def reconstruct_from_parallel(program, n_source, n_target):
+    w = np.zeros((n_source, n_target))
+    d = np.ones((n_source, n_target), np.int64)
+    for sl in program.slices:
+        mat = sl.matrix[:n_target, : len(sl.col_sources)]
+        for ci, src in enumerate(sl.col_sources):
+            nz = np.flatnonzero(mat[:, ci])
+            w[src, nz] = mat[nz, ci]
+            d[src, nz] = sl.delay
+    return w, d
+
+
+@pytest.mark.parametrize("gran", ["source", "synapse"])
+@pytest.mark.parametrize("ns,nt,dens,dr", [
+    (50, 50, 0.1, 1), (300, 200, 0.5, 4), (500, 500, 1.0, 16),
+])
+def test_serial_compile_lossless(ns, nt, dens, dr, gran):
+    layer = random_layer(ns, nt, dens, dr, seed=3, delay_granularity=gran)
+    prog = compile_serial(layer)
+    w, d = reconstruct_from_serial(prog, ns, nt)
+    np.testing.assert_array_equal(w, layer.weights)
+    conn = layer.connectivity()
+    np.testing.assert_array_equal(d[conn], layer.delays[conn])
+
+
+@pytest.mark.parametrize("gran", ["source", "synapse"])
+@pytest.mark.parametrize("ns,nt,dens,dr", [
+    (50, 50, 0.1, 1), (300, 200, 0.5, 4), (200, 100, 0.9, 8),
+])
+def test_parallel_compile_lossless(ns, nt, dens, dr, gran):
+    """The four WDM optimization strategies must be lossless."""
+    layer = random_layer(ns, nt, dens, dr, seed=4, delay_granularity=gran)
+    prog = compile_parallel(layer)
+    w, d = reconstruct_from_parallel(prog, ns, nt)
+    np.testing.assert_array_equal(w, layer.weights)
+    conn = layer.connectivity()
+    np.testing.assert_array_equal(d[conn], layer.delays[conn])
+
+
+def test_analytic_matches_exact_count():
+    for seed, (ns, nt, dens, dr) in enumerate([
+        (50, 50, 0.1, 1), (255, 255, 0.3, 8), (500, 500, 1.0, 16),
+    ]):
+        layer = random_layer(ns, nt, dens, dr, seed=seed)
+        a = serial_pe_count(LayerCharacter(ns, nt, dens, dr))
+        e = serial_pe_count_exact(layer)
+        # analytic uses nominal density; exact uses the drawn matrix
+        assert abs(a - e) <= max(1, int(0.2 * a))
+
+
+def test_gesture_layer1_serial_is_9_pes():
+    """Paper §IV-C: 2048->20 @3.16% needs 9 serial PEs (source split)."""
+    assert serial_pe_count(LayerCharacter(2048, 20, 0.0316, 1)) == 9
+
+
+def test_serial_pe_count_monotone_in_density():
+    counts = [
+        serial_pe_count(LayerCharacter(255, 255, d, 1))
+        for d in (0.1, 0.3, 0.5, 0.8, 1.0)
+    ]
+    assert counts == sorted(counts)
+    assert counts[0] == 1 and counts[-1] >= 3
+
+
+def test_subordinate_chunks_fit_budget():
+    layer = random_layer(400, 400, 0.8, 8, seed=9)
+    prog = compile_parallel(layer)
+    for sub in prog.subordinates:
+        assert total(sub.cost) <= DEFAULT_S2.dtcm_bytes * 1.001
+
+
+def test_opt_flags_reduce_wdm():
+    layer = random_layer(300, 300, 0.2, 8, seed=11)
+    opt = compile_parallel(layer, opts=OptFlags())
+    raw = compile_parallel(layer, opts=OptFlags(
+        prune_delay_slices=False, compress_zero_cols=False,
+        mac_align=True, fold_zero_row_blocks=False,
+    ))
+    assert opt.wdm_bytes < raw.wdm_bytes
+    assert opt.pe_count <= raw.pe_count
+
+
+def test_parallel_total_includes_dominant():
+    layer = random_layer(100, 100, 0.5, 2, seed=5)
+    prog = compile_parallel(layer)
+    assert prog.pe_count == prog.dominant_count + len(prog.subordinates)
+    assert prog.dominant_count >= 1
+    assert prog.pe_count == parallel_pe_count_exact(layer)

@@ -1,0 +1,102 @@
+"""Table I cost model — byte-exact pins + structural properties."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_S2, LayerCharacter
+from repro.core.cost_model import (
+    equal_parts,
+    parallel_dominant_cost,
+    parallel_subordinate_overhead,
+    serial_pe_cost,
+    serial_pe_overhead,
+    total,
+)
+
+
+class TestTableIRows:
+    """Pin every Table I formula at a known operating point."""
+
+    def test_serial_rows(self):
+        c = serial_pe_cost(
+            n_tgt_pe=255, n_src_pe=255, density=0.5, delay_range=16,
+            n_source_vertex=2,
+        )
+        assert c["input_spike_buffer"] == 4 * 255
+        assert c["dma_buffer"] == 0  # DRAM not involved
+        assert c["master_population_table"] == 12 * 2
+        assert c["address_list"] == 4 * 255
+        assert c["synaptic_matrix"] == 4 * 255 * 255 * 0.5
+        assert c["synaptic_input_buffer"] == 2 * 255 * 16 * 2
+        assert c["neuron_synapse_model"] == 4 * (8 + 6)
+        assert c["output_recording"] == 4 * (math.ceil(255 / 32) + 1) + 4 * 255 * 3
+        assert c["stack_heap"] == 12 * 2
+        assert c["os"] == 6000
+
+    def test_parallel_dominant_rows(self):
+        c = parallel_dominant_cost(
+            n_source=500, n_target=300, delay_range=16, n_source_vertex=2
+        )
+        assert c["input_spike_buffer"] == 4 * 500
+        assert c["reversed_order"] == 2 * 500 * 16
+        assert c["input_merging_table"] == 3 * 500 * 16
+        assert c["stacked_input"] == 4 * 500 * 16
+        assert c["output_recording"] == 4 * 300 * 4
+        assert c["os"] == 6000
+
+    def test_parallel_subordinate_rows(self):
+        c = parallel_subordinate_overhead(
+            n_tgt_pe=100, delay_range=8, n_source_vertex=1
+        )
+        assert c["output_recording"] == 2 * 100 * 8 * 2
+        assert c["stack_heap"] == 12
+        assert c["os"] == 6000
+
+    def test_matrix_split_divides_only_matrix(self):
+        c1 = serial_pe_cost(255, 255, 1.0, 1, 1, matrix_split=1)
+        c4 = serial_pe_cost(255, 255, 1.0, 1, 1, matrix_split=4)
+        assert c4["synaptic_matrix"] == c1["synaptic_matrix"] / 4
+        for key in c1:
+            if key != "synaptic_matrix":
+                assert c1[key] == c4[key]
+
+
+class TestPaperClaims:
+    def test_one_dominant_pe_suffices_on_dataset_grid(self):
+        """Paper §IV-A: 'one dominant PE is enough' for the 16k grid."""
+        for ns in (50, 500):
+            for nt in (50, 500):
+                for dr in (1, 16):
+                    dom = total(parallel_dominant_cost(
+                        ns, nt, dr, n_source_vertex=math.ceil(ns / 255)
+                    ))
+                    assert dom <= DEFAULT_S2.dtcm_bytes, (ns, nt, dr, dom)
+
+    def test_density_25pct_overflows_one_pe(self):
+        """Paper §IV-A: DTCM cannot hold the structures when density
+        exceeds ~25% (at the full 16-step delay buffer)."""
+        over = serial_pe_cost(255, 255, 0.30, 16, 1)
+        under = serial_pe_cost(255, 255, 0.25, 16, 1)
+        assert total(over) > DEFAULT_S2.dtcm_bytes
+        assert total(under) <= DEFAULT_S2.dtcm_bytes
+
+    def test_serial_overhead_leaves_matrix_budget(self):
+        for dr in (1, 8, 16):
+            ov = serial_pe_overhead(255, 255, dr, 2)
+            assert 0 < ov < DEFAULT_S2.dtcm_bytes / 2
+
+
+class TestEqualParts:
+    def test_basic(self):
+        assert equal_parts(500, 255) == [250, 250]
+        assert equal_parts(255, 255) == [255]
+        assert equal_parts(256, 255) == [128, 128]
+        assert equal_parts(2048, 255) == [228] * 5 + [227] * 4  # 9 PEs
+
+    def test_invariants(self):
+        for n in (1, 7, 254, 255, 256, 1000, 2048):
+            parts = equal_parts(n, 255)
+            assert sum(parts) == n
+            assert all(p <= 255 for p in parts)
+            assert max(parts) - min(parts) <= 1

@@ -1,0 +1,80 @@
+"""Dataset generation + the 12-classifier zoo."""
+import numpy as np
+import pytest
+
+from repro.core import LABEL_PARALLEL, LABEL_SERIAL, generate_dataset
+from repro.core.classifiers import zoo, ZOO_NAMES
+
+
+@pytest.fixture(scope="module")
+def mini_dataset():
+    """A 384-layer sub-grid (fast); same generator as the paper's 16k."""
+    return generate_dataset(
+        source_grid=(50, 200, 400),
+        target_grid=(100, 300),
+        density_grid=(0.1, 0.3, 0.6, 0.9),
+        delay_grid=(1, 2, 4, 6, 8, 10, 12, 16),
+        seed=7,
+    )
+
+
+def test_dataset_shape_and_labels(mini_dataset):
+    ds = mini_dataset
+    assert len(ds) == 3 * 2 * 4 * 8
+    assert ds.features.shape == (len(ds), 4)
+    # label = argmin PEs with tie -> serial
+    want = np.where(ds.parallel_pes < ds.serial_pes, LABEL_PARALLEL, LABEL_SERIAL)
+    np.testing.assert_array_equal(ds.labels, want)
+    assert 0.05 < ds.labels.mean() < 0.8  # both classes present
+
+
+def test_dataset_deterministic():
+    kw = dict(source_grid=(100,), target_grid=(100,),
+              density_grid=(0.5,), delay_grid=(1, 4), seed=3)
+    a, b = generate_dataset(**kw), generate_dataset(**kw)
+    np.testing.assert_array_equal(a.serial_pes, b.serial_pes)
+    np.testing.assert_array_equal(a.parallel_pes, b.parallel_pes)
+
+
+def test_paper_trends(mini_dataset):
+    """C1: parallel improves with density; degrades with delay range."""
+    ds = mini_dataset
+    dens = ds.features[:, 2]
+    lo = ds.labels[dens <= 0.3].mean()
+    hi = ds.labels[dens >= 0.6].mean()
+    assert hi > lo
+    delay = ds.features[:, 3]
+    early = ds.labels[delay <= 4].mean()
+    late = ds.labels[delay >= 12].mean()
+    assert early >= late
+
+
+def test_split_disjoint(mini_dataset):
+    (Xtr, ytr), (Xte, yte) = mini_dataset.split(0.25, seed=0)
+    assert len(Xte) == int(0.25 * len(mini_dataset))
+    assert len(Xtr) + len(Xte) == len(mini_dataset)
+
+
+class TestClassifierZoo:
+    def test_zoo_has_12(self):
+        assert len(ZOO_NAMES) == 12
+        assert "adaboost" in ZOO_NAMES
+
+    @pytest.mark.parametrize("name", ZOO_NAMES)
+    def test_separable_problem(self, name):
+        """Every classifier must solve an easy axis-aligned problem."""
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(600, 4))
+        y = (X[:, 1] > 0.1).astype(np.int64)
+        clf = zoo(seed=0)[name]()
+        clf.fit(X[:500], y[:500])
+        assert clf.score(X[500:], y[500:]) >= 0.9, name
+
+    def test_adaboost_beats_majority_on_paradigm_data(self, mini_dataset):
+        from repro.core import train_switch_classifier
+        clf, acc = train_switch_classifier(mini_dataset, seed=0)
+        majority = max(
+            mini_dataset.labels.mean(), 1 - mini_dataset.labels.mean()
+        )
+        assert acc > majority
+        assert acc > 0.8

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, shape + finiteness assertions.  Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.launch import steps as S
+from repro.models import init as minit, model as M
+from repro.optim import AdamWConfig, init_state
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "audio":
+        return {
+            "embeds": jnp.asarray(rng.normal(size=(b, s, cfg.d_model)) * 0.02,
+                                  jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        }
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_frontend_tokens, cfg.d_model)) * 0.02,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    table = {
+        "mamba2-130m": (24, 768, 50280),
+        "musicgen-large": (48, 2048, 2048),
+        "kimi-k2-1t-a32b": (61, 7168, 163840),
+        "olmoe-1b-7b": (16, 2048, 50304),
+        "phi3-medium-14b": (40, 5120, 100352),
+        "llama3.2-3b": (28, 3072, 128256),
+        "qwen1.5-4b": (40, 2560, 151936),
+        "qwen3-8b": (36, 4096, 151936),
+        "recurrentgemma-2b": (26, 2560, 256000),
+        "phi-3-vision-4.2b": (32, 3072, 32064),
+    }
+    l, d, v = table[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.vocab) == (l, d, v)
+
+
+def test_param_scale_sanity():
+    """Full-config parameter counts land near the published sizes."""
+    assert abs(get_config("mamba2-130m").param_count() / 130e6 - 1) < 0.3
+    assert abs(get_config("llama3.2-3b").param_count() / 3.2e9 - 1) < 0.25
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.param_count() > 0.9e12          # the trillion
+    assert kimi.active_param_count() < 40e9     # a32b
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_smoke(arch):
+    cfg = smoke_config(arch)
+    params = minit.init_params(cfg, KEY)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt = init_state(params)
+    step = jax.jit(S.make_train_step(cfg, opt_cfg))
+    batch = make_batch(cfg)
+    p0 = jax.tree.leaves(params)[0].copy()
+    params, opt, metrics = step(params, opt, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])
+    assert int(opt.step) == 1
+    assert not np.array_equal(np.asarray(p0), np.asarray(jax.tree.leaves(params)[0]))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_smoke(arch):
+    cfg = smoke_config(arch)
+    if cfg.frontend == "audio":
+        cfg = dataclasses.replace(cfg, frontend="none")  # decode path uses tokens
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = minit.init_params(cfg, KEY)
+    b, s, cache_len = 2, 12, 16
+    batch = make_batch(cfg, b, s)
+    logits, caches = M.prefill(params, cfg, batch, cache_len)
+    assert logits.shape == (b, 1, cfg.vocab)
+    pos = s + cfg.n_frontend_tokens
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    logits2, caches = M.decode_step(params, cfg, tok, jnp.int32(pos), caches,
+                                    cache_len)
+    assert logits2.shape == (b, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+def test_loss_chunking_matches_unchunked():
+    cfg = smoke_config("llama3.2-3b")
+    params = minit.init_params(cfg, KEY)
+    batch = make_batch(cfg, 2, 32)
+    full = M.train_loss(params, cfg, batch)
+    chunked = M.train_loss(
+        params, dataclasses.replace(cfg, loss_chunk=8), batch)
+    np.testing.assert_allclose(float(full), float(chunked), rtol=1e-5)
+
+
+def test_moe_dispatch_paths_agree():
+    """'sort' (gather/serial analogue) vs 'onehot' (dense/parallel analogue)
+    must agree when capacity drops nothing — the LM-side analogue of the
+    SNN serial/parallel runtime equivalence."""
+    cfg = smoke_config("olmoe-1b-7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = minit.init_params(cfg, KEY)
+    batch = make_batch(cfg, 2, 16)
+    loss_sort = M.train_loss(
+        params, dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="sort")), batch)
+    loss_onehot = M.train_loss(
+        params, dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="onehot")), batch)
+    np.testing.assert_allclose(float(loss_sort), float(loss_onehot), rtol=2e-3)
+
+
+def test_moe_local_dispatch_matches_sort():
+    """shard_map local dispatch == global sort when nothing drops."""
+    from repro.distributed.sharding import make_rules, sharding_ctx
+    from repro.launch.mesh import make_host_mesh
+    cfg = smoke_config("olmoe-1b-7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = minit.init_params(cfg, KEY)
+    batch = make_batch(cfg, 2, 16)
+    loss_sort = M.train_loss(
+        params, dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="sort")), batch)
+    mesh = make_host_mesh(1)
+    with sharding_ctx(mesh, make_rules()):
+        cfg_local = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="local"))
+        loss_local = jax.jit(
+            lambda p, b: M.train_loss(p, cfg_local, b))(params, batch)
+    np.testing.assert_allclose(float(loss_sort), float(loss_local), rtol=1e-5)

@@ -1,0 +1,74 @@
+"""HLO collective parser + roofline term extraction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.roofline import (
+    CollectiveStats, RooflineTerms, analyze, collective_bytes_from_hlo,
+)
+
+SYNTH_HLO = """
+HloModule test
+  %x = bf16[8,512]{1,0} parameter(0)
+  %ar = bf16[8,512]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[16,1024]{1,0} all-gather(%x), replica_groups=[4,8]<=[32], dimensions={0}
+  %rs = f32[4,256]{1,0} reduce-scatter(%ag), replica_groups={{0,1}}, to_apply=%add
+  %cp = s8[128]{0} collective-permute(%x), source_target_pairs={{0,1}}
+  // %dead = bf16[9999,9999] all-reduce(%x)  (comment: must be ignored)
+"""
+
+
+class TestCollectiveParser:
+    def test_bytes_by_type(self):
+        stats = collective_bytes_from_hlo(SYNTH_HLO)
+        assert stats.bytes_by_type["all-reduce"] == 8 * 512 * 2
+        assert stats.bytes_by_type["all-gather"] == 16 * 1024 * 4
+        assert stats.bytes_by_type["reduce-scatter"] == 4 * 256 * 4
+        assert stats.bytes_by_type["collective-permute"] == 128
+        assert stats.count_by_type["all-reduce"] == 1
+
+    def test_ring_time_positive(self):
+        stats = collective_bytes_from_hlo(SYNTH_HLO, link_bw=50e9)
+        # all-reduce over 4 devices: 2*(3/4)*8192B / 50e9
+        assert stats.ring_time_s > 8192 * 1.5 / 50e9
+
+    def test_iota_replica_groups(self):
+        stats = collective_bytes_from_hlo(SYNTH_HLO)
+        assert stats.bytes_by_type["all-gather"] > 0  # parsed [4,8]<=[32]
+
+    def test_empty(self):
+        stats = collective_bytes_from_hlo("HloModule empty")
+        assert stats.total_bytes == 0 and stats.ring_time_s == 0.0
+
+
+class TestRooflineTerms:
+    def test_dominant_and_fraction(self):
+        coll = CollectiveStats({"all-reduce": 100}, {"all-reduce": 1}, 2e-3)
+        t = RooflineTerms(flops=197e12 * 1e-3, hbm_bytes=819e9 * 0.5e-3,
+                          collectives=coll, chips=256)
+        assert t.compute_s == pytest.approx(1e-3)
+        assert t.memory_s == pytest.approx(0.5e-3)
+        assert t.dominant == "collective"
+        assert t.roofline_fraction() == pytest.approx(0.5)
+
+    def test_analyze_sharded_program(self):
+        """End-to-end: a sharded matmul's HLO contains collectives the
+        analyzer finds, and cost terms are positive."""
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("model",))
+        w_sh = NamedSharding(mesh, P(None, "model"))
+        x_sh = NamedSharding(mesh, P(None))
+
+        def f(x, w):
+            y = x @ w          # output sharded on model
+            return y.sum()     # forces a cross-shard reduction
+
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        compiled = jax.jit(f, in_shardings=(x_sh, w_sh)).lower(x, w).compile()
+        terms = analyze(compiled, chips=n)
+        assert terms.flops > 0
+        assert terms.hbm_bytes > 0
+        assert terms.dominant in ("compute", "memory", "collective")

@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests: the full paper pipeline + the launchers."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    SwitchingCompiler,
+    feedforward_network,
+    generate_dataset,
+    train_switch_classifier,
+)
+from repro.core.layer import LIFParams
+from repro.core.runtime import run_network, run_reference
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    """dataset -> classifier -> switching compiler (the whole paper)."""
+    ds = generate_dataset(
+        source_grid=(50, 200, 400),
+        target_grid=(100, 300),
+        density_grid=(0.1, 0.4, 0.8),
+        delay_grid=(1, 4, 8),
+        seed=11,
+    )
+    clf, acc = train_switch_classifier(ds, seed=0)
+    return ds, clf, acc
+
+
+def test_classifier_accuracy_reasonable(pipeline):
+    _, _, acc = pipeline
+    assert acc >= 0.8  # paper: 91.69% on their compiler's dataset
+
+
+def test_end_to_end_compile_and_run(pipeline):
+    """Compile a network with the prejudging classifier and execute it;
+    spikes must match the dense oracle layer-by-layer, and the switched
+    mapping must not exceed either pure paradigm's PE count."""
+    _, clf, _ = pipeline
+    lif = LIFParams(alpha=0.5, v_th=64.0)
+    net = feedforward_network([80, 60, 40], density=0.5, delay_range=2, seed=5)
+    for l in net.layers:
+        l.lif = lif
+
+    switched = SwitchingCompiler("classifier", clf).compile_network(net)
+    serial = SwitchingCompiler("serial").compile_network(net)
+    parallel = SwitchingCompiler("parallel").compile_network(net)
+    assert switched.total_pes <= max(serial.total_pes, parallel.total_pes)
+
+    rng = np.random.default_rng(0)
+    spikes = (rng.random((12, 2, 80)) < 0.3).astype(np.float32)
+    outs = run_network(net, switched, spikes)
+    x = spikes
+    for layer, z in zip(net.layers, outs):
+        z_ref = run_reference(layer, x, lif)
+        np.testing.assert_array_equal(z, z_ref)
+        x = z_ref
+
+
+def test_compile_work_halves_with_prejudging(pipeline):
+    """C4: the switching system does half the compilations of 'ideal'."""
+    _, clf, _ = pipeline
+    net = feedforward_network([300, 200, 100], density=0.4, delay_range=4,
+                              seed=8)
+    sw = SwitchingCompiler("classifier", clf).compile_network(net)
+    ideal = SwitchingCompiler("ideal").compile_network(net)
+    assert sw.total_compilations * 2 == ideal.total_compilations
+    assert sw.host_bytes_peak < ideal.host_bytes_peak
+
+
+class TestLaunchers:
+    def test_train_launcher_with_failure_injection(self, tmp_path):
+        from repro.launch.train import main
+        out = main([
+            "--arch", "llama3.2-3b", "--smoke", "--steps", "30",
+            "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "10", "--simulate-failure", "15",
+            "--log-every", "100",
+        ])
+        assert out["last_loss"] < out["first_loss"]  # learning happened
+
+    def test_serve_launcher(self):
+        from repro.launch.serve import main
+        out = main([
+            "--arch", "qwen3-8b", "--smoke", "--batch", "2",
+            "--prompt-len", "8", "--gen", "4",
+        ])
+        assert out["tokens"].shape == (2, 4)
