@@ -1,0 +1,133 @@
+"""End-to-end network inference: fused single-scan executor vs per-layer.
+
+Times the same compiled mixed-paradigm report through both execution modes
+(interpret mode on the CPU host; TPU is the target), counts
+``lower_serial``/``lower_parallel`` invocations, and asserts the fused
+path's executable cache lowers each layer exactly once per report.  Writes
+``BENCH_network.json`` at the repo root so the perf trajectory is tracked
+across PRs.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import SwitchingCompiler
+from repro.core.layer import LIFParams, SNNNetwork, random_layer
+from repro.core.runtime import (
+    lowering_counts,
+    run_network,
+    run_network_layerwise,
+)
+from repro.core.switching import CompileReport
+
+from .common import csv_row, timeit
+
+_JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_network.json"
+
+
+def _mixed_network(sizes, density, delay_range, lif):
+    layers = []
+    for i in range(len(sizes) - 1):
+        l = random_layer(sizes[i], sizes[i + 1], density, delay_range,
+                         seed=i, name=f"bench.l{i}")
+        l.lif = lif
+        layers.append(l)
+    net = SNNNetwork(layers=layers, name="bench")
+    compiled = [
+        SwitchingCompiler("serial" if i % 2 == 0 else "parallel").compile_layer(l)
+        for i, l in enumerate(net.layers)
+    ]
+    return net, CompileReport(layers=compiled)
+
+
+def run(*, steps: int = 40, batch: int = 8) -> dict:
+    print("\n# network executor (fused single-scan vs per-layer, CPU interpret)")
+    lif = LIFParams(alpha=0.5, v_th=64.0)
+    sizes = [192, 160, 128, 96, 64]          # 4 mixed serial/parallel layers
+    net, report = _mixed_network(sizes, density=0.3, delay_range=4, lif=lif)
+    rng = np.random.default_rng(0)
+    spikes = (rng.random((steps, batch, sizes[0])) < 0.2).astype(np.float32)
+
+    # -- lower counts: fused caches executables on the report ----------------
+    before = lowering_counts()
+    fused_out = run_network(net, report, spikes)          # warmup + lower
+    after_first = lowering_counts()
+    run_network(net, report, spikes)                      # cached
+    after_second = lowering_counts()
+    fused_lowers = sum(after_first[k] - before[k] for k in before)
+    fused_relowers = sum(after_second[k] - after_first[k] for k in before)
+    n_layers = len(net.layers)
+    assert fused_lowers == n_layers, (fused_lowers, n_layers)
+    assert fused_relowers == 0, after_second
+
+    base_out = run_network_layerwise(net, report, spikes)  # warmup
+    after_base = lowering_counts()
+    layerwise_lowers = sum(after_base[k] - after_second[k] for k in before)
+
+    for a, b in zip(fused_out, base_out):
+        np.testing.assert_array_equal(a, b)
+
+    # -- throughput: kernel-interpret mode (CPU stand-in for the TPU path) ---
+    us_fused = timeit(lambda: run_network(net, report, spikes, interpret=True),
+                      warmup=1, iters=5)
+    us_layer = timeit(
+        lambda: run_network_layerwise(net, report, spikes, interpret=True),
+        warmup=1, iters=5,
+    )
+    bsteps = steps * batch
+    fused_sps = bsteps / (us_fused / 1e6)
+    layer_sps = bsteps / (us_layer / 1e6)
+    speedup = us_layer / us_fused
+    csv_row("network_fused_4layer_interp", us_fused,
+            f"batch_timesteps_per_s={fused_sps:.0f}")
+    csv_row("network_layerwise_4layer_interp", us_layer,
+            f"batch_timesteps_per_s={layer_sps:.0f}")
+    csv_row("network_fused_speedup_interp", us_fused,
+            f"x_vs_layerwise={speedup:.2f}")
+
+    # -- throughput: auto mode (jnp reference kernels on CPU) ----------------
+    us_fused_auto = timeit(lambda: run_network(net, report, spikes),
+                           warmup=1, iters=5)
+    us_layer_auto = timeit(lambda: run_network_layerwise(net, report, spikes),
+                           warmup=1, iters=5)
+    speedup_auto = us_layer_auto / us_fused_auto
+    csv_row("network_fused_4layer_auto", us_fused_auto,
+            f"batch_timesteps_per_s={bsteps / (us_fused_auto / 1e6):.0f}")
+    csv_row("network_layerwise_4layer_auto", us_layer_auto,
+            f"batch_timesteps_per_s={bsteps / (us_layer_auto / 1e6):.0f}")
+    csv_row("network_fused_speedup_auto", us_fused_auto,
+            f"x_vs_layerwise={speedup_auto:.2f}")
+
+    result = {
+        "network": {
+            "sizes": sizes,
+            "paradigms": [l.paradigm for l in report.layers],
+            "steps": steps,
+            "batch": batch,
+        },
+        "interpret_mode": {
+            "fused_us_per_run": us_fused,
+            "layerwise_us_per_run": us_layer,
+            "fused_batch_timesteps_per_s": fused_sps,
+            "layerwise_batch_timesteps_per_s": layer_sps,
+            "speedup_fused_vs_layerwise": speedup,
+        },
+        "auto_mode": {
+            "fused_us_per_run": us_fused_auto,
+            "layerwise_us_per_run": us_layer_auto,
+            "speedup_fused_vs_layerwise": speedup_auto,
+        },
+        "lower_calls_fused_first_run": fused_lowers,
+        "lower_calls_fused_repeat_run": fused_relowers,
+        "lower_calls_layerwise_per_run": layerwise_lowers,
+    }
+    _JSON_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {_JSON_PATH.name} (speedup {speedup:.2f}x)")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -32,6 +32,7 @@ def main() -> None:
         bench_gesture,
         bench_kernels,
         bench_marginals,
+        bench_network,
         bench_switching,
     )
 
@@ -44,6 +45,7 @@ def main() -> None:
     bench_gesture.run()
     bench_compile_time.run()
     bench_kernels.run()
+    bench_network.run()
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
 
 

@@ -1,11 +1,29 @@
 from .reference import LIFState, init_state, run_reference
 from .serial_runtime import SerialExecutable, lower_serial, run_serial
 from .parallel_runtime import ParallelExecutable, lower_parallel, run_parallel
+from .executor import (
+    LayerMeta,
+    NetworkExecutable,
+    get_layer_executable,
+    network_executable,
+)
+from .network import run_network, run_network_layerwise
+
+from . import parallel_runtime as _par_rt
+from . import serial_runtime as _ser_rt
+
+
+def lowering_counts() -> dict:
+    """Total lower_serial / lower_parallel calls so far in this process."""
+    return {"serial": _ser_rt.LOWER_COUNT, "parallel": _par_rt.LOWER_COUNT}
+
 
 __all__ = [
-    "run_network",
+    "run_network", "run_network_layerwise",
     "LIFState", "init_state", "run_reference",
     "SerialExecutable", "lower_serial", "run_serial",
     "ParallelExecutable", "lower_parallel", "run_parallel",
+    "LayerMeta", "NetworkExecutable",
+    "get_layer_executable", "network_executable",
+    "lowering_counts",
 ]
-from .network import run_network

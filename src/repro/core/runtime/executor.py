@@ -1,0 +1,223 @@
+"""Fused whole-network executor — one jitted scan for the mixed network.
+
+On SpiNNaker2 every layer advances together each timestep: the chip runs a
+lockstep per-timestep pipeline across all PEs (arXiv 1911.02385), whatever
+paradigm each layer's PEs execute.  This module mirrors that structure on
+the accelerator:
+
+* :func:`get_layer_executable` lowers a :class:`CompiledLayer`'s program
+  once and caches the result on the compiled layer (keyed by program
+  identity — the executable lives exactly as long as the program it was
+  lowered from), so repeated runs never re-lower.
+* :class:`NetworkExecutable` stacks the per-layer state (LIF ``v``/``z``,
+  f32 delay rings, int8 spike-history rings) and runs the entire mixed
+  serial/parallel network in a **single jitted ``jax.lax.scan`` over
+  timesteps**.  Layer outputs cascade inside the step; nothing crosses the
+  host boundary until the final spike trains are fetched.
+
+This replaces the per-layer execution mode (kept as
+:func:`repro.core.runtime.network.run_network_layerwise`) that ran N
+independent scans with a host sync and a fresh lowering between layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..layer import LIFParams, SNNNetwork
+from ..parallel_compiler import ParallelProgram
+from ..serial_compiler import SerialProgram
+from ..switching import CompiledLayer, CompileReport
+from .parallel_runtime import ParallelExecutable, lower_parallel, parallel_step
+from .reference import init_state
+from .serial_runtime import SerialExecutable, lower_serial, serial_step
+
+
+def get_layer_executable(
+    compiled: CompiledLayer, lif: LIFParams | None = None
+):
+    """Lower ``compiled.program`` once; reuse the cached executable after.
+
+    The cache is invalidated (re-lowered) if it was built for different
+    LIF parameters than the ones requested now.
+    """
+    lif = lif or LIFParams()
+    exe = compiled.executable
+    if exe is not None and exe.lif == lif:
+        return exe
+    prog = compiled.program
+    if isinstance(prog, SerialProgram):
+        exe = lower_serial(prog, lif)
+    elif isinstance(prog, ParallelProgram):
+        exe = lower_parallel(prog, lif)
+    else:  # pragma: no cover
+        raise TypeError(type(prog))
+    compiled.executable = exe
+    return exe
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMeta:
+    """Static (hashable) per-layer facts baked into the jitted scan."""
+
+    paradigm: str        # "serial" | "parallel"
+    n_source: int
+    n_target: int
+    delay_range: int
+    alpha: float
+    v_th: float
+
+    @property
+    def ring_depth(self) -> int:
+        """Spike-history ring depth; >= 1 even for degenerate programs."""
+        return max(1, self.delay_range)
+
+
+def _layer_params(exe) -> Tuple[jnp.ndarray, ...]:
+    """The traced operand arrays of one lowered layer (a pytree leaf tuple)."""
+    if isinstance(exe, SerialExecutable):
+        return (exe.row_weight, exe.row_delay, exe.row_src, exe.row_tgt)
+    return (exe.wdm_stack, exe.col_source, exe.col_delay)
+
+
+def _init_carry(metas: Tuple[LayerMeta, ...], batch: int):
+    states = []
+    for meta in metas:
+        if meta.paradigm == "serial":
+            states.append(init_state(batch, meta.n_target, meta.delay_range))
+        else:
+            x_hist = jnp.zeros(
+                (meta.ring_depth, meta.n_source, batch), jnp.int8
+            )
+            states.append((x_hist, init_state(batch, meta.n_target, 0)))
+    return tuple(states)
+
+
+def _scan_network(
+    metas: Tuple[LayerMeta, ...],
+    interpret: bool | None,
+    params: List[Tuple[jnp.ndarray, ...]],
+    spikes: jnp.ndarray,          # (T, B, n_input) f32
+):
+    batch = spikes.shape[1]
+
+    def step(carry, x_t):
+        t, states = carry
+        x = x_t
+        new_states, outs = [], []
+        for meta, p, st in zip(metas, params, states):
+            if meta.paradigm == "serial":
+                st, z = serial_step(
+                    *p, st, x, t,
+                    delay_range=meta.delay_range, n_target=meta.n_target,
+                    alpha=meta.alpha, v_th=meta.v_th, interpret=interpret,
+                )
+            else:
+                x_hist, lif_st = st
+                x_hist, lif_st, z = parallel_step(
+                    *p, x_hist, lif_st, x, t,
+                    alpha=meta.alpha, v_th=meta.v_th, interpret=interpret,
+                )
+                st = (x_hist, lif_st)
+            new_states.append(st)
+            outs.append(z)
+            x = z                  # cascade inside the device step
+        return (t + 1, tuple(new_states)), tuple(outs)
+
+    init = (jnp.int32(0), _init_carry(metas, batch))
+    (_, _), outs = jax.lax.scan(step, init, spikes)
+    return outs
+
+
+class NetworkExecutable:
+    """A whole compiled network, lowered once, runnable in one device scan."""
+
+    def __init__(
+        self,
+        metas: Tuple[LayerMeta, ...],
+        params: List[Tuple[jnp.ndarray, ...]],
+        name: str = "snn",
+    ):
+        self.metas = tuple(metas)
+        self.params = list(params)
+        self.name = name
+        self._fns = {}   # interpret flag -> jitted scan
+
+    @classmethod
+    def build(cls, net: SNNNetwork, report: CompileReport) -> "NetworkExecutable":
+        if len(report.layers) != len(net.layers):
+            raise ValueError("report does not match network")
+        metas, params = [], []
+        for layer, compiled in zip(net.layers, report.layers):
+            exe = get_layer_executable(compiled, layer.lif)
+            metas.append(
+                LayerMeta(
+                    paradigm=compiled.paradigm,
+                    n_source=exe.n_source,
+                    n_target=exe.n_target,
+                    delay_range=exe.delay_range,
+                    alpha=exe.lif.alpha,
+                    v_th=exe.lif.v_th,
+                )
+            )
+            params.append(_layer_params(exe))
+        return cls(tuple(metas), params, name=getattr(net, "name", "snn"))
+
+    @property
+    def n_input(self) -> int:
+        return self.metas[0].n_source
+
+    def run(
+        self,
+        spikes: np.ndarray,        # (T, B, n_input) 0/1
+        *,
+        interpret: bool | None = None,
+    ) -> List[np.ndarray]:
+        """Returns the per-layer spike trains [(T, B, n_l) ...]."""
+        if not self.metas:
+            return []
+        if spikes.ndim != 3 or spikes.shape[2] != self.n_input:
+            raise ValueError(
+                f"spikes must be (T, B, {self.n_input}); got {spikes.shape}"
+            )
+        fn = self._fns.get(interpret)
+        if fn is None:
+            fn = jax.jit(partial(_scan_network, self.metas, interpret))
+            self._fns[interpret] = fn
+        outs = fn(self.params, jnp.asarray(spikes, jnp.float32))
+        # single host sync, after the whole network finished on device
+        return [np.asarray(z) for z in outs]
+
+
+def _matches_network(exe: NetworkExecutable, net: SNNNetwork) -> bool:
+    """Does the cached executable still reflect the net's sizes and LIF?
+
+    The network contributes only layer sizes and LIF parameters to the
+    executable (weights come from the report's programs), so these are the
+    facts that can go stale.
+    """
+    if len(exe.metas) != len(net.layers):
+        return False
+    return all(
+        meta.n_source == layer.n_source
+        and meta.n_target == layer.n_target
+        and meta.alpha == layer.lif.alpha
+        and meta.v_th == layer.lif.v_th
+        for meta, layer in zip(exe.metas, net.layers)
+    )
+
+
+def network_executable(
+    net: SNNNetwork, report: CompileReport
+) -> NetworkExecutable:
+    """The report's cached fused executable, (re)building when stale."""
+    exe = report.executable
+    if exe is None or not _matches_network(exe, net):
+        exe = NetworkExecutable.build(net, report)
+        report.executable = exe
+    return exe

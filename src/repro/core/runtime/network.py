@@ -4,6 +4,14 @@ Runs a compiled :class:`~repro.core.switching.CompileReport` end-to-end:
 each layer executes under the paradigm the switching system chose for it
 (serial -> event-driven gather path, parallel -> MXU matmul path), layer
 outputs cascade as the next layer's input spikes within a timestep.
+
+By default the whole mixed network runs as one fused jitted scan over
+timesteps (:class:`~repro.core.runtime.executor.NetworkExecutable`) with
+all lowered executables cached on the report — the lockstep pipeline real
+SpiNNaker2 hardware executes.  ``run_network_layerwise`` keeps the old
+mode — N independent per-layer scans with a host sync and a fresh
+lowering between layers — as the comparison baseline for tests and
+benchmarks.
 """
 from __future__ import annotations
 
@@ -15,6 +23,7 @@ from ..layer import SNNNetwork
 from ..parallel_compiler import ParallelProgram
 from ..serial_compiler import SerialProgram
 from ..switching import CompileReport
+from .executor import network_executable
 from .parallel_runtime import run_parallel
 from .serial_runtime import run_serial
 
@@ -25,8 +34,24 @@ def run_network(
     spikes: np.ndarray,          # (T, B, n_input) 0/1
     *,
     interpret: bool | None = None,
+    fused: bool = True,
 ) -> List[np.ndarray]:
     """Returns the per-layer spike trains [(T, B, n_l) ...]."""
+    if len(report.layers) != len(net.layers):
+        raise ValueError("report does not match network")
+    if fused:
+        return network_executable(net, report).run(spikes, interpret=interpret)
+    return run_network_layerwise(net, report, spikes, interpret=interpret)
+
+
+def run_network_layerwise(
+    net: SNNNetwork,
+    report: CompileReport,
+    spikes: np.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> List[np.ndarray]:
+    """Per-layer baseline: one scan + host round-trip + lowering per layer."""
     if len(report.layers) != len(net.layers):
         raise ValueError("report does not match network")
     outs = []
@@ -34,7 +59,7 @@ def run_network(
     for layer, compiled in zip(net.layers, report.layers):
         prog = compiled.program
         if isinstance(prog, SerialProgram):
-            z = run_serial(layer, x, layer.lif, program=prog)
+            z = run_serial(layer, x, layer.lif, program=prog, interpret=interpret)
         elif isinstance(prog, ParallelProgram):
             z = run_parallel(
                 layer, x, layer.lif, program=prog, interpret=interpret

@@ -6,13 +6,20 @@ Per timestep:
    spike vectors) and assembles the *stacked input buffer* through the
    input merging table: column c of the buffer is
    ``x[t - delay(c)][source(c)]``, read via the *reversed order* ring
-   indices.  (A gather — the serial/VPU-friendly part.)
+   indices.  The ring is stored ``(depth, n_source, batch)`` so the read
+   is a single flat row ``take`` on the ``(depth * n_source, batch)``
+   view — one gathered axis, which XLA lowers as an efficient
+   take-along-axis instead of a mixed-basis advanced-indexing gather.
 2. **Subordinate PEs** — one int8 x int8 -> int32 matmul of the optimized
    weight-delay-map with the stacked input on the MAC array.  On TPU this
    is the Pallas MXU kernel :func:`repro.kernels.spike_wdm_matmul`.
 3. Fused LIF update (:func:`repro.kernels.lif_update`).
 
 Bit-identical to the dense oracle: every accumulation is an exact int32.
+
+The ring depth is clamped to ``max(1, delay_range)`` so the degenerate
+``delay_range == 0`` program (an empty layer) executes instead of dividing
+by zero in the ring index arithmetic.
 """
 from __future__ import annotations
 
@@ -29,6 +36,10 @@ from ..layer import LIFParams, SNNLayer
 from ..parallel_compiler import OptFlags, ParallelProgram, compile_parallel
 from .reference import LIFState, init_state
 
+#: Total ``lower_parallel`` invocations (benchmarks assert executable caching
+#: keeps this at one per layer per report).
+LOWER_COUNT = 0
+
 
 @dataclasses.dataclass
 class ParallelExecutable:
@@ -40,11 +51,18 @@ class ParallelExecutable:
     col_delay: jnp.ndarray    # (C,) i32 reversed-order: column -> delay
     lif: LIFParams
 
+    @property
+    def ring_depth(self) -> int:
+        """Spike-history ring depth; >= 1 even for degenerate programs."""
+        return max(1, self.delay_range)
+
 
 def lower_parallel(
     program: ParallelProgram, lif: LIFParams | None = None
 ) -> ParallelExecutable:
     """Concatenate the optimized WDM slices into one (T x C) MXU operand."""
+    global LOWER_COUNT
+    LOWER_COUNT += 1
     mats, srcs, dls = [], [], []
     for sl in program.slices:
         n_cols = len(sl.col_sources)
@@ -72,28 +90,32 @@ def lower_parallel(
     )
 
 
-@partial(jax.jit, static_argnames=("delay_range", "alpha", "v_th", "interpret"))
+@partial(jax.jit, static_argnames=("alpha", "v_th", "interpret"))
 def parallel_step(
     wdm_stack, col_source, col_delay,
-    x_hist: jnp.ndarray,      # (D, B, S) int8 spike history ring
+    x_hist: jnp.ndarray,      # (max(1, D), S, B) int8 spike history ring
     state: LIFState,          # .ring unused here (kept for API parity)
     x_t: jnp.ndarray,         # (B, S) f32 spikes at t
     t: jnp.ndarray,
     *,
-    delay_range: int,
     alpha: float,
     v_th: float,
     interpret: bool | None = None,
 ):
-    d = delay_range
-    # dominant PE: stacked input via merging table + reversed order
+    # the allocated ring IS the truth for the depth (clamped >= 1 at
+    # allocation via ring_depth), so the index arithmetic cannot drift
+    d, n_source = x_hist.shape[0], x_hist.shape[1]
+    # dominant PE: stacked input via merging table + reversed order; one
+    # flat row gather on the (depth * n_source, batch) ring view
     slot = (t - col_delay) % d                       # (C,)
-    stacked = x_hist[slot, :, col_source]            # (C, B) int8
+    stacked = jnp.take(
+        x_hist.reshape(d * n_source, -1), slot * n_source + col_source, axis=0
+    )                                                # (C, B) int8
     i_t = spike_wdm_matmul(
         wdm_stack, stacked, interpret=interpret
     ).astype(jnp.float32)                            # (T, B)
-    # write x_t into the history ring AFTER the read (d >= 1)
-    x_hist = x_hist.at[t % d].set(x_t.astype(jnp.int8))
+    # write x_t into the history ring AFTER the read (delays are >= 1)
+    x_hist = x_hist.at[t % d].set(x_t.T.astype(jnp.int8))
     # fused LIF update operates (neurons, batch)
     v_new, z_new = lif_update(
         i_t, state.v.T, state.z.T, alpha=alpha, v_th=v_th, interpret=interpret
@@ -114,14 +136,13 @@ def run_parallel(
     exe = lower_parallel(program, lif or layer.lif)
     T, B, _ = spikes.shape
     state = init_state(B, exe.n_target, 0)
-    x_hist = jnp.zeros((exe.delay_range, B, exe.n_source), jnp.int8)
+    x_hist = jnp.zeros((exe.ring_depth, exe.n_source, B), jnp.int8)
 
     def step(carry, x_t):
         x_hist, state, t = carry
         x_hist, state, z = parallel_step(
             exe.wdm_stack, exe.col_source, exe.col_delay,
             x_hist, state, x_t, t,
-            delay_range=exe.delay_range,
             alpha=exe.lif.alpha, v_th=exe.lif.v_th, interpret=interpret,
         )
         return (x_hist, state, t + 1), z

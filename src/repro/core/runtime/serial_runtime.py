@@ -10,6 +10,9 @@ The TPU adaptation (DESIGN.md §2) expresses the same event-driven gather as
 a data-parallel masked gather + segment-sum: per synaptic row r,
 ``contribution[r] = weight[r] * x_t[src[r]]`` scattered into the
 (delay-slot, target) ring — identical arithmetic, identical spike trains.
+The scatter is a single flat ``segment_sum`` over all ``B * R`` (batch, row)
+pairs with batch-offset segment ids; the neural update runs through the
+fused Pallas LIF kernel (:func:`repro.kernels.lif_update`).
 """
 from __future__ import annotations
 
@@ -20,9 +23,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...kernels.lif_update import lif_update
 from ..layer import LIFParams, SNNLayer
 from ..serial_compiler import SerialProgram, compile_serial, unpack_rows
 from .reference import LIFState, init_state
+
+#: Total ``lower_serial`` invocations (benchmarks assert executable caching
+#: keeps this at one per layer per report).
+LOWER_COUNT = 0
 
 
 @dataclasses.dataclass
@@ -41,6 +49,8 @@ class SerialExecutable:
 
 def lower_serial(program: SerialProgram, lif: LIFParams | None = None) -> SerialExecutable:
     """Decode packed rows of every cell into flat gather arrays."""
+    global LOWER_COUNT
+    LOWER_COUNT += 1
     ws, ds_, ss, ts = [], [], [], []
     for cell in program.cells:
         w, d, tgt_local = unpack_rows(cell.synaptic_rows)
@@ -64,7 +74,10 @@ def lower_serial(program: SerialProgram, lif: LIFParams | None = None) -> Serial
     )
 
 
-@partial(jax.jit, static_argnames=("delay_range", "n_target"))
+@partial(
+    jax.jit,
+    static_argnames=("delay_range", "n_target", "alpha", "v_th", "interpret"),
+)
 def serial_step(
     exe_weight, exe_delay, exe_src, exe_tgt,
     state: LIFState,
@@ -75,22 +88,32 @@ def serial_step(
     n_target: int,
     alpha: float,
     v_th: float,
+    interpret: bool | None = None,
 ):
     d_slots = delay_range + 1
+    batch = x_t.shape[0]
     # event-driven gather: row fires iff its source spiked this timestep
     fired = x_t[:, exe_src]                      # (B, R)
     contrib = fired * exe_weight[None, :]        # (B, R)
     slot = (t + exe_delay) % d_slots             # (R,)
     seg = slot * n_target + exe_tgt              # (R,) ring-flat segment ids
-    updates = jax.vmap(
-        lambda c: jax.ops.segment_sum(c, seg, num_segments=d_slots * n_target)
-    )(contrib)                                   # (B, slots*T)
+    # one flat segment_sum over all (batch, row) pairs: batch b's rows are
+    # offset into their own block of d_slots * n_target segments
+    seg_flat = (
+        jnp.arange(batch, dtype=jnp.int32)[:, None] * (d_slots * n_target)
+        + seg[None, :]
+    ).reshape(-1)                                # (B*R,)
+    updates = jax.ops.segment_sum(
+        contrib.reshape(-1), seg_flat, num_segments=batch * d_slots * n_target
+    )                                            # (B*slots*T,)
     ring = state.ring + updates.reshape(-1, d_slots, n_target).transpose(1, 0, 2)
     i_t = ring[t % d_slots]
     ring = ring.at[t % d_slots].set(0.0)
-    v_new = i_t + alpha * state.v - state.z * v_th
-    z_new = (v_new >= v_th).astype(jnp.float32)
-    return LIFState(v=v_new, z=z_new, ring=ring), z_new
+    # fused Pallas LIF update operates (neurons, batch)
+    v_new, z_new = lif_update(
+        i_t.T, state.v.T, state.z.T, alpha=alpha, v_th=v_th, interpret=interpret
+    )
+    return LIFState(v=v_new.T, z=z_new.T, ring=ring), z_new.T
 
 
 def run_serial(
@@ -98,6 +121,7 @@ def run_serial(
     spikes: np.ndarray,
     lif: LIFParams | None = None,
     program: SerialProgram | None = None,
+    interpret: bool | None = None,
 ) -> np.ndarray:
     program = program or compile_serial(layer)
     exe = lower_serial(program, lif or layer.lif)
@@ -110,7 +134,7 @@ def run_serial(
             exe.row_weight, exe.row_delay, exe.row_src, exe.row_tgt,
             state, x_t, t,
             delay_range=exe.delay_range, n_target=exe.n_target,
-            alpha=exe.lif.alpha, v_th=exe.lif.v_th,
+            alpha=exe.lif.alpha, v_th=exe.lif.v_th, interpret=interpret,
         )
         return (state, t + 1), z
 

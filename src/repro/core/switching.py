@@ -59,11 +59,22 @@ class CompiledLayer:
     n_compilations: int      # 1 for prejudged, 2 for ideal
     host_bytes_peak: int     # artifacts resident while deciding
     compile_seconds: float
+    #: Lowered runtime executable (SerialExecutable | ParallelExecutable),
+    #: attached lazily by :mod:`repro.core.runtime.executor` so each program
+    #: is lowered exactly once per report however many times it runs.
+    executable: object = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
 
 @dataclasses.dataclass
 class CompileReport:
     layers: List[CompiledLayer]
+    #: Cached :class:`repro.core.runtime.executor.NetworkExecutable` for the
+    #: whole report (attached lazily; reused across ``run_network`` calls).
+    executable: object = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def total_pes(self) -> int:

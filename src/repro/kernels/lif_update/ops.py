@@ -19,9 +19,18 @@ def lif_update(
     bb: int = 128,
     interpret: bool | None = None,
 ):
-    """Fused V' = I + alpha*V - z*V_th; z' = V' >= V_th.  (N, B) f32 maps."""
+    """Fused V' = I + alpha*V - z*V_th; z' = V' >= V_th.  (N, B) f32 maps.
+
+    On TPU this runs the Pallas VPU kernel.  In auto mode (``interpret is
+    None``) off-TPU the jnp reference runs instead — the same elementwise
+    f32 expression, bit-identical, without interpreter overhead in the
+    per-timestep hot loop.  Pass ``interpret=True`` to force the Pallas
+    kernel body through the interpreter (CI coverage of the TPU path).
+    """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        if jax.default_backend() != "tpu":
+            return lif_update_ref(i_t, v, z, alpha=alpha, v_th=v_th)
+        interpret = False
     n, b = i_t.shape
     bn_eff = min(bn, n) if n % min(bn, n) == 0 else n
     pn = (-n) % bn_eff

@@ -31,12 +31,17 @@ def spike_wdm_matmul(
 ) -> jnp.ndarray:
     """int8 (M, K) @ int8 (K, N) -> int32 (M, N), auto-padded to tiles.
 
-    On TPU this runs the Pallas MXU kernel; elsewhere the kernel body is
-    interpreted (same arithmetic) unless the operands are tiny, where the
-    jnp reference is used directly.
+    On TPU this runs the Pallas MXU kernel.  In auto mode (``interpret is
+    None``) off-TPU the exact jnp reference runs instead — every
+    accumulation is identical int32 math, and the reference is orders of
+    magnitude faster than interpreting the kernel grid block-by-block
+    inside a scan.  Pass ``interpret=True`` to force the Pallas kernel
+    body through the interpreter (CI coverage of the TPU code path).
     """
     if interpret is None:
-        interpret = not on_tpu()
+        if not on_tpu():
+            return spike_wdm_matmul_ref(wdm, stacked)
+        interpret = False
     m, k = wdm.shape
     _, n = stacked.shape
     if k == 0:

@@ -49,7 +49,7 @@ class TestSpikeWDMMatmul:
     def test_zero_columns(self):
         a = rand_wdm(32, 0)
         x = rand_spikes(0, 4)
-        out = spike_wdm_matmul(a, x)
+        out = spike_wdm_matmul(a, x, interpret=True)
         assert out.shape == (32, 4) and int(jnp.abs(out).sum()) == 0
 
     def test_rejects_non_int8(self):
@@ -84,7 +84,7 @@ class TestLIFUpdate:
         i = jnp.asarray([[100.0], [0.0]], jnp.float32)
         v = jnp.asarray([[0.0], [128.0]], jnp.float32)
         z = jnp.asarray([[0.0], [1.0]], jnp.float32)
-        vn, zn = lif_update(i, v, z, alpha=0.5, v_th=64.0)
+        vn, zn = lif_update(i, v, z, alpha=0.5, v_th=64.0, interpret=True)
         assert float(vn[0, 0]) == 100.0 and float(zn[0, 0]) == 1.0
         assert float(vn[1, 0]) == 0.0 and float(zn[1, 0]) == 0.0
 

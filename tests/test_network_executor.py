@@ -1,0 +1,165 @@
+"""Fused single-scan network executor vs the per-layer baseline.
+
+The fused executor must be bit-identical to ``run_network_layerwise`` (and
+the dense oracle chain) on randomized mixed-paradigm networks, lower every
+program exactly once per report, and survive the degenerate
+``delay_range == 0`` parallel program.
+"""
+import numpy as np
+import pytest
+
+from repro.core import SwitchingCompiler, random_layer
+from repro.core.layer import LIFParams, SNNLayer, SNNNetwork
+from repro.core.runtime import (
+    NetworkExecutable,
+    lowering_counts,
+    network_executable,
+    run_network,
+    run_network_layerwise,
+    run_parallel,
+    run_reference,
+    run_serial,
+)
+from repro.core.switching import CompileReport
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+
+def mixed_report(net, start="serial"):
+    """Compile each layer under alternating forced paradigms."""
+    order = ("serial", "parallel") if start == "serial" else ("parallel", "serial")
+    compiled = [
+        SwitchingCompiler(order[i % 2]).compile_layer(l)
+        for i, l in enumerate(net.layers)
+    ]
+    return CompileReport(layers=compiled)
+
+
+def random_net(sizes, rng):
+    layers = []
+    for i in range(len(sizes) - 1):
+        l = random_layer(
+            sizes[i], sizes[i + 1],
+            density=float(rng.uniform(0.1, 0.9)),
+            delay_range=int(rng.integers(1, 9)),       # delays 1..8
+            seed=int(rng.integers(0, 2**31)),
+            delay_granularity=rng.choice(["source", "synapse"]),
+        )
+        l.lif = LIF
+        layers.append(l)
+    return SNNNetwork(layers=layers)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fused_matches_layerwise_property(seed):
+    """Randomized mixed-paradigm networks: fused == per-layer, bitwise."""
+    rng = np.random.default_rng(seed)
+    n_layers = int(rng.integers(2, 5))
+    sizes = [int(rng.integers(10, 60)) for _ in range(n_layers + 1)]
+    batch = int(rng.integers(1, 5))                    # batch 1..4
+    net = random_net(sizes, rng)
+    report = mixed_report(net, start=rng.choice(["serial", "parallel"]))
+    spikes = (rng.random((12, batch, sizes[0])) < 0.3).astype(np.float32)
+    fused = run_network(net, report, spikes)
+    base = run_network_layerwise(net, report, spikes)
+    assert len(fused) == len(base) == n_layers
+    for a, b in zip(fused, base):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fused_matches_oracle_chain():
+    rng = np.random.default_rng(7)
+    net = random_net([40, 30, 25, 20, 15], rng)
+    report = mixed_report(net)
+    spikes = (rng.random((16, 2, 40)) < 0.25).astype(np.float32)
+    outs = run_network(net, report, spikes)
+    x = spikes
+    for layer, z in zip(net.layers, outs):
+        z_ref = run_reference(layer, x, LIF)
+        np.testing.assert_array_equal(z, z_ref)
+        x = z_ref
+    assert sum(int(z.sum()) for z in outs) > 0
+
+
+def test_executable_cached_one_lower_per_layer_per_report():
+    rng = np.random.default_rng(11)
+    net = random_net([30, 25, 20, 15, 12], rng)
+    report = mixed_report(net)
+    spikes = (rng.random((8, 2, 30)) < 0.3).astype(np.float32)
+    before = lowering_counts()
+    run_network(net, report, spikes)
+    after_first = lowering_counts()
+    delta = {k: after_first[k] - before[k] for k in before}
+    assert delta == {"serial": 2, "parallel": 2}
+    # repeated runs (any batch size / length) re-lower nothing
+    run_network(net, report, spikes)
+    run_network(net, report, (rng.random((5, 1, 30)) < 0.3).astype(np.float32))
+    after_more = lowering_counts()
+    assert after_more == after_first
+    # the fused executable itself is cached on the report
+    assert network_executable(net, report) is report.executable
+    assert isinstance(report.executable, NetworkExecutable)
+    for compiled in report.layers:
+        assert compiled.executable is not None
+
+
+def test_delay_range_zero_parallel_regression():
+    """delay_range == 0 (empty layer) must execute, not divide by zero."""
+    layer = SNNLayer(
+        weights=np.zeros((12, 8)),
+        delays=np.ones((12, 8), dtype=np.int64),
+        delay_range=0,
+        lif=LIF,
+    )
+    spikes = np.ones((6, 2, 12), np.float32)
+    z = run_parallel(layer, spikes, LIF)
+    assert z.shape == (6, 2, 8)
+    assert z.sum() == 0
+    # and through the fused network path
+    net = SNNNetwork(layers=[layer])
+    report = CompileReport(
+        layers=[SwitchingCompiler("parallel").compile_layer(layer)]
+    )
+    outs = run_network(net, report, spikes)
+    assert outs[0].shape == (6, 2, 8)
+    assert outs[0].sum() == 0
+
+
+@pytest.mark.parametrize("interpret", [True, None])
+def test_interpret_threads_to_both_paradigms(interpret):
+    """run_network(interpret=...) reaches serial and parallel kernels alike."""
+    rng = np.random.default_rng(3)
+    net = random_net([20, 16, 12], rng)
+    report = mixed_report(net)
+    spikes = (rng.random((6, 2, 20)) < 0.4).astype(np.float32)
+    outs = run_network(net, report, spikes, interpret=interpret)
+    base = run_network_layerwise(net, report, spikes, interpret=interpret)
+    for a, b in zip(outs, base):
+        np.testing.assert_array_equal(a, b)
+    # the standalone entry points accept the flag too
+    z_ser = run_serial(net.layers[0], spikes, LIF, interpret=interpret)
+    np.testing.assert_array_equal(z_ser, outs[0])
+
+
+def test_lif_change_invalidates_cached_executable():
+    """Changing layer.lif after a run must not serve stale baked params."""
+    rng = np.random.default_rng(13)
+    net = random_net([20, 16, 12], rng)
+    report = mixed_report(net)
+    spikes = (rng.random((10, 2, 20)) < 0.4).astype(np.float32)
+    first = run_network(net, report, spikes)
+    for l in net.layers:
+        l.lif = LIFParams(alpha=0.25, v_th=32.0)
+    fused = run_network(net, report, spikes)
+    base = run_network_layerwise(net, report, spikes)
+    for a, b in zip(fused, base):
+        np.testing.assert_array_equal(a, b)
+    assert any(not np.array_equal(a, b) for a, b in zip(first, fused))
+
+
+def test_fused_rejects_mismatched_input():
+    rng = np.random.default_rng(5)
+    net = random_net([20, 10], rng)
+    report = mixed_report(net)
+    with pytest.raises(ValueError):
+        run_network(net, report, np.zeros((4, 1, 21), np.float32))
