@@ -12,6 +12,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
+import jax
 import numpy as np
 
 from repro.core import SwitchingCompiler
@@ -71,10 +72,18 @@ def run(*, steps: int = 40, batch: int = 8) -> dict:
         np.testing.assert_array_equal(a, b)
 
     # -- throughput: kernel-interpret mode (CPU stand-in for the TPU path) ---
-    us_fused = timeit(lambda: run_network(net, report, spikes, interpret=True),
-                      warmup=1, iters=5)
+    # every timed closure blocks on its outputs before the clock stops, so
+    # async device dispatch cannot under-measure execution time
+    us_fused = timeit(
+        lambda: jax.block_until_ready(
+            run_network(net, report, spikes, interpret=True)
+        ),
+        warmup=1, iters=5,
+    )
     us_layer = timeit(
-        lambda: run_network_layerwise(net, report, spikes, interpret=True),
+        lambda: jax.block_until_ready(
+            run_network_layerwise(net, report, spikes, interpret=True)
+        ),
         warmup=1, iters=5,
     )
     bsteps = steps * batch
@@ -89,10 +98,16 @@ def run(*, steps: int = 40, batch: int = 8) -> dict:
             f"x_vs_layerwise={speedup:.2f}")
 
     # -- throughput: auto mode (jnp reference kernels on CPU) ----------------
-    us_fused_auto = timeit(lambda: run_network(net, report, spikes),
-                           warmup=1, iters=5)
-    us_layer_auto = timeit(lambda: run_network_layerwise(net, report, spikes),
-                           warmup=1, iters=5)
+    us_fused_auto = timeit(
+        lambda: jax.block_until_ready(run_network(net, report, spikes)),
+        warmup=1, iters=5,
+    )
+    us_layer_auto = timeit(
+        lambda: jax.block_until_ready(
+            run_network_layerwise(net, report, spikes)
+        ),
+        warmup=1, iters=5,
+    )
     speedup_auto = us_layer_auto / us_fused_auto
     csv_row("network_fused_4layer_auto", us_fused_auto,
             f"batch_timesteps_per_s={bsteps / (us_fused_auto / 1e6):.0f}")

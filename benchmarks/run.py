@@ -8,6 +8,8 @@
   §IV-C    -> bench_gesture          (2048-20-4 gesture model PEs)
   §IV motivation -> bench_compile_time (prejudge vs compile-both)
   kernels  -> bench_kernels          (Pallas kernels + runtime throughput)
+  runtime  -> bench_network          (fused single-scan vs per-layer -> BENCH_network.json)
+  serving  -> bench_serving          (batched Poisson serving -> BENCH_serving.json)
 
 ``PYTHONPATH=src python -m benchmarks.run [--fast] [--seeds N]``
 """
@@ -33,6 +35,7 @@ def main() -> None:
         bench_kernels,
         bench_marginals,
         bench_network,
+        bench_serving,
         bench_switching,
     )
 
@@ -46,6 +49,7 @@ def main() -> None:
     bench_compile_time.run()
     bench_kernels.run()
     bench_network.run()
+    bench_serving.run()
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
 
 

@@ -18,6 +18,15 @@ def lowering_counts() -> dict:
     return {"serial": _ser_rt.LOWER_COUNT, "parallel": _par_rt.LOWER_COUNT}
 
 
+def lowering_total() -> int:
+    """Sum of all lowering invocations — the serving layer's staleness probe.
+
+    The executable pool snapshots this at warmup and asserts it never moves
+    under steady-state traffic (zero re-lowerings per bucket hit).
+    """
+    return sum(lowering_counts().values())
+
+
 __all__ = [
     "run_network", "run_network_layerwise",
     "LIFState", "init_state", "run_reference",
@@ -25,5 +34,5 @@ __all__ = [
     "ParallelExecutable", "lower_parallel", "run_parallel",
     "LayerMeta", "NetworkExecutable",
     "get_layer_executable", "network_executable",
-    "lowering_counts",
+    "lowering_counts", "lowering_total",
 ]

@@ -103,8 +103,26 @@ def _scan_network(
     interpret: bool | None,
     params: List[Tuple[jnp.ndarray, ...]],
     spikes: jnp.ndarray,          # (T, B, n_input) f32
+    valid_steps: jnp.ndarray | None = None,   # (B,) i32 true length per request
 ):
     batch = spikes.shape[1]
+
+    # Step-count mask: batch slot b is live while t < valid_steps[b].  The
+    # mask is applied entirely OUTSIDE the scan (one vectorized multiply on
+    # the input train and one per layer's stacked output) so masking costs
+    # nothing per timestep.  Padded timesteps are provably inert per
+    # request: the input mask stops them injecting external spikes, the
+    # output mask forces their emitted spikes to exact zeros, and because
+    # the scan is causal and batch slots are independent, the first
+    # valid_steps[b] outputs are bit-identical to running that request
+    # alone (live entries are multiplied by 1.0 — bit-exact).
+    live = None
+    if valid_steps is not None:
+        live = (
+            jnp.arange(spikes.shape[0], dtype=jnp.int32)[:, None]
+            < valid_steps[None, :]
+        ).astype(spikes.dtype)[:, :, None]               # (T, B, 1)
+        spikes = spikes * live
 
     def step(carry, x_t):
         t, states = carry
@@ -131,6 +149,8 @@ def _scan_network(
 
     init = (jnp.int32(0), _init_carry(metas, batch))
     (_, _), outs = jax.lax.scan(step, init, spikes)
+    if live is not None:
+        outs = tuple(z * live for z in outs)
     return outs
 
 
@@ -172,24 +192,51 @@ class NetworkExecutable:
     def n_input(self) -> int:
         return self.metas[0].n_source
 
-    def run(
+    def run_device(
         self,
         spikes: np.ndarray,        # (T, B, n_input) 0/1
         *,
+        valid_steps: np.ndarray | None = None,   # (B,) true steps per request
         interpret: bool | None = None,
-    ) -> List[np.ndarray]:
-        """Returns the per-layer spike trains [(T, B, n_l) ...]."""
+    ) -> Tuple[jnp.ndarray, ...]:
+        """Per-layer spike trains as device arrays — no host sync.
+
+        Callers that time this must ``jax.block_until_ready`` the result.
+        With ``valid_steps``, batch slot ``b`` is masked after its first
+        ``valid_steps[b]`` timesteps: the live prefix is bit-identical to an
+        unmasked run and every padded timestep emits exact zeros, so padded
+        micro-batches are provably inert per request.
+        """
         if not self.metas:
-            return []
+            return ()
         if spikes.ndim != 3 or spikes.shape[2] != self.n_input:
             raise ValueError(
                 f"spikes must be (T, B, {self.n_input}); got {spikes.shape}"
             )
+        if valid_steps is not None:
+            valid_steps = jnp.asarray(valid_steps, jnp.int32)
+            if valid_steps.shape != (spikes.shape[1],):
+                raise ValueError(
+                    f"valid_steps must be ({spikes.shape[1]},); "
+                    f"got {valid_steps.shape}"
+                )
         fn = self._fns.get(interpret)
         if fn is None:
             fn = jax.jit(partial(_scan_network, self.metas, interpret))
             self._fns[interpret] = fn
-        outs = fn(self.params, jnp.asarray(spikes, jnp.float32))
+        return fn(self.params, jnp.asarray(spikes, jnp.float32), valid_steps)
+
+    def run(
+        self,
+        spikes: np.ndarray,        # (T, B, n_input) 0/1
+        *,
+        valid_steps: np.ndarray | None = None,
+        interpret: bool | None = None,
+    ) -> List[np.ndarray]:
+        """Returns the per-layer spike trains [(T, B, n_l) ...]."""
+        outs = self.run_device(
+            spikes, valid_steps=valid_steps, interpret=interpret
+        )
         # single host sync, after the whole network finished on device
         return [np.asarray(z) for z in outs]
 

@@ -1,0 +1,31 @@
+"""Batched inference serving over the fused network executor.
+
+Turns independent, variable-shape spike-train requests into efficiently
+batched fused-scan executions:
+
+    RequestQueue -> ShapeBucketingScheduler -> ExecutablePool -> device
+         (FIFO)        (pad + micro-batch)      (warmed jit entries)
+
+with :class:`ServingEngine` as the facade and :class:`ServingMetrics`
+tracking latency, throughput, and bucket-hit rate.  See
+``docs/architecture.md`` ("Serving stack") for the data flow and the
+padding-inertness invariant.
+"""
+from .engine import RequestResult, ServingEngine
+from .metrics import RequestRecord, ServingMetrics
+from .pool import ExecutablePool, PoolEntry
+from .queue import InferenceRequest, QueueFull, RequestQueue
+from .scheduler import (
+    BucketKey,
+    MicroBatch,
+    ShapeBucketingScheduler,
+    next_pow2,
+)
+
+__all__ = [
+    "ServingEngine", "RequestResult",
+    "ServingMetrics", "RequestRecord",
+    "ExecutablePool", "PoolEntry",
+    "RequestQueue", "InferenceRequest", "QueueFull",
+    "ShapeBucketingScheduler", "BucketKey", "MicroBatch", "next_pow2",
+]

@@ -1,0 +1,183 @@
+"""ServingEngine — the facade tying queue, scheduler, pool, and metrics.
+
+Synchronous path (batch drivers, benchmarks)::
+
+    engine = ServingEngine(net, report)
+    rid = engine.submit(spikes)            # (steps, n_in) single request
+    results = engine.drain()               # {rid: [per-layer (steps, n_l)]}
+
+Asynchronous path (live traffic)::
+
+    async with background serve loop:
+        out = await engine.submit_async(spikes)   # resolves when served
+
+``drain`` forms shape-bucketed, padded micro-batches from everything
+pending and runs each through the executable pool's warmed fused
+executables; results come back trimmed to every request's true
+``(steps, n_layer)`` shape, bit-identical to running that request alone
+(the executor's step-count mask keeps padding inert).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.layer import SNNNetwork
+from ..core.switching import CompileReport
+from .metrics import RequestRecord, ServingMetrics
+from .pool import ExecutablePool
+from .queue import InferenceRequest, RequestQueue
+from .scheduler import BucketKey, MicroBatch, ShapeBucketingScheduler
+
+#: A served result: per-layer spike trains [(steps, n_l) ...], true length.
+RequestResult = List[np.ndarray]
+
+
+class ServingEngine:
+    """Batched SNN inference serving over one compiled network."""
+
+    def __init__(
+        self,
+        net: SNNNetwork,
+        report: CompileReport,
+        *,
+        micro_batch: int = 8,
+        min_bucket_steps: int = 8,
+        max_pending: Optional[int] = None,
+        max_retained_results: int = 4096,
+        interpret: bool | None = None,
+    ):
+        self.queue = RequestQueue(max_pending=max_pending)
+        self.scheduler = ShapeBucketingScheduler(
+            net.layers[0].n_source,
+            micro_batch=micro_batch,
+            min_bucket_steps=min_bucket_steps,
+        )
+        self.pool = ExecutablePool(interpret=interpret)
+        self.pool.register(net, report)
+        self.metrics = ServingMetrics()
+        #: Sync-path replies, oldest evicted beyond ``max_retained_results``
+        #: (async replies are delivered through their futures, not stored).
+        self.results: "OrderedDict[int, RequestResult]" = OrderedDict()
+        self.max_retained_results = max_retained_results
+        self._futures: Dict[int, asyncio.Future] = {}
+        self._running = False
+
+    # -- warmup --------------------------------------------------------------
+    def warmup(self, step_counts: List[int]) -> int:
+        """Pre-compile the buckets the expected traffic mix lands in."""
+        buckets = {
+            BucketKey(
+                steps=self.scheduler.bucket_steps(s),
+                n_in=self.scheduler.n_input,
+                batch=self.scheduler.micro_batch,
+            )
+            for s in step_counts
+        }
+        return self.pool.warmup(sorted(buckets, key=lambda k: k.steps))
+
+    # -- synchronous path ----------------------------------------------------
+    def submit(self, spikes: np.ndarray) -> int:
+        """Enqueue one (steps, n_in) request; returns its request id."""
+        if spikes.ndim != 2 or spikes.shape[1] > self.scheduler.n_input:
+            raise ValueError(
+                f"request must be (steps, n_in <= {self.scheduler.n_input}); "
+                f"got {np.shape(spikes)}"
+            )
+        return self.queue.submit(spikes).request_id
+
+    def drain(self) -> Dict[int, RequestResult]:
+        """Serve everything pending; returns {request_id: result}.
+
+        Requests with a waiting ``submit_async`` future are resolved here
+        (whoever calls drain), so a sync drain can never strand an async
+        waiter.  Only futureless (sync-path) replies are retained in
+        ``self.results``, bounded by ``max_retained_results``.
+        """
+        served: Dict[int, RequestResult] = {}
+        pending = self.queue.pop_all()
+        for mb in self.scheduler.form_microbatches(pending):
+            served.update(self._run_microbatch(mb))
+        for rid, result in served.items():
+            fut = self._futures.pop(rid, None)
+            if fut is not None:
+                self._resolve_future(fut, result)
+            else:
+                self.results[rid] = result
+        while len(self.results) > self.max_retained_results:
+            self.results.popitem(last=False)
+        return served
+
+    @staticmethod
+    def _resolve_future(fut: asyncio.Future, result: RequestResult) -> None:
+        def _set():
+            if not fut.done():
+                fut.set_result(result)
+
+        try:
+            # schedules onto the future's own loop; safe from any thread,
+            # including the loop thread itself
+            fut.get_loop().call_soon_threadsafe(_set)
+        except RuntimeError:        # loop already closed; waiter is gone
+            pass
+
+    def _run_microbatch(self, mb: MicroBatch) -> Dict[int, RequestResult]:
+        t_dispatch = time.perf_counter()
+        outs = self.pool.run_microbatch(mb, block=True)
+        t_complete = time.perf_counter()
+        host_outs = [np.asarray(z) for z in outs]
+        served, records = {}, []
+        for b, req in enumerate(mb.requests):
+            served[req.request_id] = [z[: req.steps, b] for z in host_outs]
+            records.append(
+                RequestRecord(
+                    request_id=req.request_id,
+                    steps=req.steps,
+                    n_in=req.n_in,
+                    bucket_steps=mb.key.steps,
+                    batch_occupancy=len(mb.requests),
+                    t_enqueue=req.t_enqueue,
+                    t_dispatch=t_dispatch,
+                    t_complete=t_complete,
+                )
+            )
+        self.metrics.record_batch(records)
+        return served
+
+    # -- asynchronous path ---------------------------------------------------
+    async def submit_async(self, spikes: np.ndarray) -> RequestResult:
+        """Enqueue and await the served result (needs ``serve_forever``)."""
+        fut = asyncio.get_running_loop().create_future()
+        # register the future before the request can possibly be drained —
+        # submit and this registration run without an intervening await
+        rid = self.submit(spikes)
+        self._futures[rid] = fut
+        return await fut
+
+    async def serve_forever(self, *, poll_interval: float = 0.001) -> None:
+        """Drain loop: batch whatever arrived; drain resolves the futures."""
+        self._running = True
+        try:
+            while self._running:
+                if self.queue.empty():
+                    await asyncio.sleep(poll_interval)
+                    continue
+                self.drain()
+                await asyncio.sleep(0)      # yield to submitters
+        finally:
+            self._running = False
+
+    def stop(self) -> None:
+        self._running = False
+
+    # -- introspection -------------------------------------------------------
+    def stats(self) -> Dict:
+        return self.metrics.summary(
+            bucket_hits=self.pool.bucket_hits,
+            bucket_misses=self.pool.bucket_misses,
+            relowerings=self.pool.relowerings(),
+        )

@@ -1,0 +1,120 @@
+"""Serving metrics — per-request latency, throughput, bucketing efficiency.
+
+Every completed request contributes one :class:`RequestRecord`; the
+:class:`ServingMetrics` aggregate answers the questions the north star
+cares about: how long does a user wait (queue + execution latency
+percentiles), how much useful work flows (request-steps/s over the busy
+window), and how well the bucketing policy amortizes compilation
+(bucket-hit rate, padding overhead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Timing of one request through queue -> scheduler -> pool."""
+
+    request_id: int
+    steps: int                  # true timesteps
+    n_in: int
+    bucket_steps: int           # padded timesteps it ran at
+    batch_occupancy: int        # live requests in its micro-batch
+    t_enqueue: float
+    t_dispatch: float           # micro-batch handed to the pool
+    t_complete: float           # device done (block_until_ready passed)
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.t_dispatch - self.t_enqueue
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_complete - self.t_enqueue
+
+
+class ServingMetrics:
+    """Aggregates request records plus pool counters into one summary.
+
+    Totals are cumulative counters; per-request records live in a bounded
+    window (``max_records``) so a long-running engine cannot grow without
+    bound — percentiles and throughput describe the recent window.
+    """
+
+    def __init__(self, max_records: int = 65536):
+        self.records: deque = deque(maxlen=max_records)
+        self.batches_dispatched = 0
+        self.total_requests = 0
+        self.total_request_steps = 0
+
+    def record_batch(self, records: List[RequestRecord]) -> None:
+        self.batches_dispatched += 1
+        self.total_requests += len(records)
+        self.total_request_steps += sum(r.steps for r in records)
+        self.records.extend(records)
+
+    # -- aggregates ----------------------------------------------------------
+    @property
+    def n_requests(self) -> int:
+        return self.total_requests
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        if not self.records:
+            return {"p50_ms": 0.0, "p95_ms": 0.0, "max_ms": 0.0}
+        lat = np.array([r.latency_s for r in self.records]) * 1e3
+        return {
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p95_ms": float(np.percentile(lat, 95)),
+            "max_ms": float(lat.max()),
+        }
+
+    def throughput_request_steps_per_s(self) -> Optional[float]:
+        """True (unpadded) request-steps per second over the busy window."""
+        if not self.records:
+            return None
+        t0 = min(r.t_dispatch for r in self.records)
+        t1 = max(r.t_complete for r in self.records)
+        if t1 <= t0:
+            return None
+        return sum(r.steps for r in self.records) / (t1 - t0)
+
+    def padding_overhead(self) -> Optional[float]:
+        """Padded-steps / true-steps ratio; 1.0 means zero padding waste."""
+        real = sum(r.steps for r in self.records)
+        padded = sum(r.bucket_steps for r in self.records)
+        return padded / real if real else None
+
+    def summary(
+        self,
+        *,
+        bucket_hits: int = 0,
+        bucket_misses: int = 0,
+        relowerings: int = 0,
+    ) -> Dict:
+        total = bucket_hits + bucket_misses
+        out = {
+            "requests": self.n_requests,
+            "batches": self.batches_dispatched,
+            "mean_batch_occupancy": (
+                float(np.mean([r.batch_occupancy for r in self.records]))
+                if self.records else 0.0
+            ),
+            "mean_queue_wait_ms": (
+                float(np.mean([r.queue_wait_s for r in self.records])) * 1e3
+                if self.records else 0.0
+            ),
+            **self.latency_percentiles(),
+            "throughput_request_steps_per_s":
+                self.throughput_request_steps_per_s(),
+            "padding_overhead": self.padding_overhead(),
+            "bucket_hits": bucket_hits,
+            "bucket_misses": bucket_misses,
+            "bucket_hit_rate": bucket_hits / total if total else None,
+            "relowerings": relowerings,
+        }
+        return out

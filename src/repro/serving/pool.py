@@ -1,0 +1,141 @@
+"""Executable pool — warmed fused executables, one jit entry per bucket.
+
+The pool owns the mapping from a compiled model (``net`` + ``report``) to
+its fused :class:`~repro.core.runtime.NetworkExecutable` and tracks which
+``(model, bucket-shape)`` pairs have already been traced and compiled.
+Steady-state traffic therefore never re-lowers a layer program and never
+re-traces a scan: a bucket *hit* reuses the cached jit entry, a *miss*
+pays one compile and warms the shape for every later request.
+
+Staleness flows through the runtime's own caches —
+:func:`~repro.core.runtime.network_executable` rebuilds when the network
+mutates (e.g. a layer's ``LIFParams`` changes) — and the pool exposes
+:meth:`relowerings` so callers can assert the steady state really is
+re-lowering-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+import jax
+import numpy as np
+
+from ..core.layer import SNNNetwork
+from ..core.runtime import NetworkExecutable, lowering_total, network_executable
+from ..core.switching import CompileReport
+from .scheduler import BucketKey, MicroBatch
+
+DEFAULT_MODEL = "default"
+
+
+@dataclasses.dataclass
+class PoolEntry:
+    net: SNNNetwork
+    report: CompileReport
+    warm_shapes: Set[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=set
+    )
+    #: The NetworkExecutable instance the warm set was built against; a
+    #: rebuild (network mutation) starts a fresh jit cache, so the warm
+    #: set must reset with it or "hits" would hide re-trace stalls.
+    _warmed_exe: object = dataclasses.field(default=None, repr=False)
+
+    @property
+    def executable(self) -> NetworkExecutable:
+        exe = network_executable(self.net, self.report)
+        if exe is not self._warmed_exe:
+            self.warm_shapes.clear()
+            self._warmed_exe = exe
+        return exe
+
+
+class ExecutablePool:
+    """Named compiled models, each with a warmed jit entry per bucket shape."""
+
+    def __init__(self, *, interpret: bool | None = None):
+        self.interpret = interpret
+        self._entries: Dict[str, PoolEntry] = {}
+        self.bucket_hits = 0
+        self.bucket_misses = 0
+        self._lower_mark = lowering_total()
+
+    # -- model registry ------------------------------------------------------
+    def register(
+        self, net: SNNNetwork, report: CompileReport, name: str = DEFAULT_MODEL
+    ) -> PoolEntry:
+        entry = PoolEntry(net=net, report=report)
+        self._entries[name] = entry
+        entry.executable            # lower every layer now, not on first hit
+        self._lower_mark = lowering_total()
+        return entry
+
+    def entry(self, name: str = DEFAULT_MODEL) -> PoolEntry:
+        return self._entries[name]
+
+    def models(self) -> List[str]:
+        return list(self._entries)
+
+    # -- execution -----------------------------------------------------------
+    def warmup(
+        self, buckets: Iterable[BucketKey], name: str = DEFAULT_MODEL
+    ) -> int:
+        """Trace + compile the given bucket shapes with dummy traffic.
+
+        Returns the number of shapes newly warmed.  After warmup those
+        buckets are all hits and :meth:`relowerings` stays at zero.
+        """
+        entry = self.entry(name)
+        exe = entry.executable          # refreshes the warm set if rebuilt
+        warmed = 0
+        for key in buckets:
+            if key.shape in entry.warm_shapes:
+                continue
+            dummy = np.zeros(key.shape, np.float32)
+            valid = np.zeros(key.batch, np.int32)
+            jax.block_until_ready(
+                exe.run_device(
+                    dummy, valid_steps=valid, interpret=self.interpret
+                )
+            )
+            entry.warm_shapes.add(key.shape)
+            warmed += 1
+        self._lower_mark = lowering_total()
+        return warmed
+
+    def run_microbatch(
+        self,
+        micro_batch: MicroBatch,
+        name: str = DEFAULT_MODEL,
+        *,
+        block: bool = True,
+    ):
+        """Run one padded micro-batch; returns per-layer device arrays.
+
+        With ``block`` (default) the call returns only after the device
+        finishes, so wall-clock around it measures real execution time.
+        """
+        entry = self.entry(name)
+        exe = entry.executable          # refreshes the warm set if rebuilt
+        if micro_batch.key.shape in entry.warm_shapes:
+            self.bucket_hits += 1
+        else:
+            self.bucket_misses += 1
+            entry.warm_shapes.add(micro_batch.key.shape)
+        outs = exe.run_device(
+            micro_batch.spikes,
+            valid_steps=micro_batch.valid_steps,
+            interpret=self.interpret,
+        )
+        if block:
+            outs = jax.block_until_ready(outs)
+        return outs
+
+    # -- invariants ----------------------------------------------------------
+    def relowerings(self) -> int:
+        """Layer lowerings since the last register/warmup — steady state: 0."""
+        return lowering_total() - self._lower_mark
+
+    def hit_rate(self) -> Optional[float]:
+        total = self.bucket_hits + self.bucket_misses
+        return self.bucket_hits / total if total else None

@@ -1,0 +1,98 @@
+"""Request queue — the front door of the serving subsystem.
+
+A request is one spike train for one user: a ``(steps, n_in)`` 0/1 array
+with its own length and input width (``n_in`` may be narrower than the
+network input; missing channels are silent neurons).  The queue is a
+plain thread-safe FIFO — all shape policy (bucketing, padding, batching)
+lives in :mod:`repro.serving.scheduler`, so the queue stays dumb and the
+policy stays testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+class QueueFull(RuntimeError):
+    """Raised by :meth:`RequestQueue.put` when ``max_pending`` is reached."""
+
+
+@dataclasses.dataclass
+class InferenceRequest:
+    """One pending spike-train inference request."""
+
+    request_id: int
+    spikes: np.ndarray          # (steps, n_in) 0/1 float32
+    t_enqueue: float            # perf_counter stamp at submit
+
+    @property
+    def steps(self) -> int:
+        return self.spikes.shape[0]
+
+    @property
+    def n_in(self) -> int:
+        return self.spikes.shape[1]
+
+
+class RequestQueue:
+    """Thread-safe FIFO of :class:`InferenceRequest`."""
+
+    def __init__(self, max_pending: Optional[int] = None):
+        self.max_pending = max_pending
+        self._items: List[InferenceRequest] = []
+        self._lock = threading.Lock()
+        self._nonempty = threading.Condition(self._lock)
+        self._ids = itertools.count()
+
+    def submit(self, spikes: np.ndarray) -> InferenceRequest:
+        """Validate, wrap, and enqueue one spike train; returns the request."""
+        spikes = np.asarray(spikes, np.float32)
+        if spikes.ndim != 2 or spikes.shape[0] < 1 or spikes.shape[1] < 1:
+            raise ValueError(
+                f"request spikes must be (steps, n_in); got {spikes.shape}"
+            )
+        req = InferenceRequest(
+            request_id=next(self._ids),
+            spikes=spikes,
+            t_enqueue=time.perf_counter(),
+        )
+        with self._lock:
+            if (
+                self.max_pending is not None
+                and len(self._items) >= self.max_pending
+            ):
+                raise QueueFull(
+                    f"{len(self._items)} pending >= max_pending "
+                    f"{self.max_pending}"
+                )
+            self._items.append(req)
+            self._nonempty.notify_all()
+        return req
+
+    def pop_all(self) -> List[InferenceRequest]:
+        """Drain every pending request, FIFO order."""
+        with self._lock:
+            items, self._items = self._items, []
+            return items
+
+    def pop_batch(
+        self, max_n: int, timeout: Optional[float] = None
+    ) -> List[InferenceRequest]:
+        """Up to ``max_n`` requests; blocks up to ``timeout`` for the first."""
+        with self._lock:
+            if not self._items and timeout:
+                self._nonempty.wait(timeout)
+            taken, self._items = self._items[:max_n], self._items[max_n:]
+            return taken
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def empty(self) -> bool:
+        return len(self) == 0

@@ -1,0 +1,120 @@
+"""Shape-bucketing scheduler — variable requests into fixed-shape batches.
+
+A jitted executable is cached per input *shape*; unconstrained request
+shapes would make every request a fresh XLA compile.  The scheduler maps
+every request onto a small closed set of padded shapes:
+
+* **steps** round up to the next power of two (floored at
+  ``min_bucket_steps``) — at most ~log2(T_max) step buckets ever exist,
+  and padding waste is bounded by 2x.
+* **n_in** pads up to the network input width — extra channels carry zero
+  spikes, i.e. silent source neurons that contribute nothing.
+* **batch** always pads up to the fixed micro-batch width — partial
+  batches fill the tail with empty slots (``valid_steps == 0``) instead
+  of introducing a second batch dimension per occupancy.
+
+Padded timesteps and empty slots are made *inert* (exact-zero outputs,
+bit-identical live prefix) by the executor's step-count mask
+(:meth:`repro.core.runtime.NetworkExecutable.run_device`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .queue import InferenceRequest
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """The padded device shape one micro-batch runs at."""
+
+    steps: int    # padded timestep count (power of two)
+    n_in: int     # network input width
+    batch: int    # micro-batch width
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (self.steps, self.batch, self.n_in)
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """A bucketed, padded group of requests ready for one fused scan."""
+
+    key: BucketKey
+    requests: List[InferenceRequest]       # <= key.batch, FIFO order
+    spikes: np.ndarray                     # key.shape f32, zero-padded
+    valid_steps: np.ndarray                # (key.batch,) i32; 0 = empty slot
+
+    @property
+    def real_request_steps(self) -> int:
+        return int(sum(r.steps for r in self.requests))
+
+    @property
+    def padded_request_steps(self) -> int:
+        return self.key.steps * self.key.batch
+
+
+class ShapeBucketingScheduler:
+    """Groups pending requests into padded fixed-shape micro-batches."""
+
+    def __init__(
+        self,
+        n_input: int,
+        *,
+        micro_batch: int = 8,
+        min_bucket_steps: int = 8,
+    ):
+        if micro_batch < 1 or min_bucket_steps < 1:
+            raise ValueError("micro_batch and min_bucket_steps must be >= 1")
+        self.n_input = n_input
+        self.micro_batch = micro_batch
+        self.min_bucket_steps = min_bucket_steps
+
+    def bucket_steps(self, steps: int) -> int:
+        return max(self.min_bucket_steps, next_pow2(steps))
+
+    def bucket_for(self, request: InferenceRequest) -> BucketKey:
+        if request.n_in > self.n_input:
+            raise ValueError(
+                f"request {request.request_id} has n_in {request.n_in} > "
+                f"network input {self.n_input}"
+            )
+        return BucketKey(
+            steps=self.bucket_steps(request.steps),
+            n_in=self.n_input,
+            batch=self.micro_batch,
+        )
+
+    def form_microbatches(
+        self, requests: List[InferenceRequest]
+    ) -> List[MicroBatch]:
+        """Bucket, chunk, and pad; preserves FIFO order within a bucket."""
+        by_bucket: Dict[BucketKey, List[InferenceRequest]] = {}
+        for req in requests:
+            by_bucket.setdefault(self.bucket_for(req), []).append(req)
+        batches = []
+        for key, reqs in by_bucket.items():
+            for i in range(0, len(reqs), key.batch):
+                batches.append(self._pad(key, reqs[i : i + key.batch]))
+        return batches
+
+    def _pad(
+        self, key: BucketKey, requests: List[InferenceRequest]
+    ) -> MicroBatch:
+        spikes = np.zeros(key.shape, np.float32)
+        valid = np.zeros(key.batch, np.int32)
+        for b, req in enumerate(requests):
+            spikes[: req.steps, b, : req.n_in] = req.spikes
+            valid[b] = req.steps
+        return MicroBatch(
+            key=key, requests=requests, spikes=spikes, valid_steps=valid
+        )
