@@ -1,26 +1,31 @@
-"""Serving benchmark: Poisson traffic through the batched serving engine.
+"""Serving benchmarks: Poisson traffic through the batched serving engine.
 
-Simulates a Poisson-arrival mix of variable-shape requests (4 distinct
-``(steps, n_in)`` shapes), serves it through :class:`ServingEngine`
-(shape-bucketed, padded, micro-batched fused scans), and compares against
-one-request-at-a-time dispatch on the same fused executable.  Asserts the
-serving invariants the subsystem exists for:
+Two scenarios, both writing into ``BENCH_serving.json``:
 
-* steady-state bucket-hit rate >= 90% (warmed jit entry per bucket),
-* zero layer re-lowerings after warmup,
-* batched throughput (true request-steps/s) beats serial dispatch.
+**Steady state** (PR 2) — a Poisson-arrival mix of variable-shape
+requests served through :class:`ServingEngine` wave draining, against
+one-request-at-a-time dispatch on the same fused executable.  Asserts
+the bucketing invariants: steady-state bucket-hit rate >= 90%, zero
+layer re-lowerings after warmup, batched throughput above serial
+dispatch.
 
-The network is compiled all-parallel (the MAC/MXU paradigm): batching
-amortizes the weight-delay-map traversal across the micro-batch, which is
-where serving batches pay off on the matmul path.  (Serial-paradigm
-layers run an event-driven gather that is linear in batch, so they gain
-only dispatch amortization — the mixed-paradigm correctness story is
-covered by the serving property tests, not this throughput bench.)
+**Continuous vs wave** (PR 3) — mixed-priority traffic across TWO
+registered models replayed twice at the *same offered load*: once with
+wave draining (``engine.drain()`` — the whole backlog per gulp, new
+arrivals wait out the entire wave) and once with continuous batching
+(``engine.step_continuous()`` — arrivals admitted into open buckets
+between every scan launch).  Asserts that continuous batching beats
+wave draining on p95 latency, that the steady state stays re-lowering
+free in both modes, that nothing is shed, and that a sample of replies
+is bit-identical to solo runs on the owning model.
 
-Writes ``BENCH_serving.json`` at the repo root.  All timed sections stop
-the clock only after results are host-materialized or
-``jax.block_until_ready`` has passed; batched-vs-solo uses best-of-N
-(the noise-robust estimator) to survive this host's scheduler jitter.
+All timed sections stop the clock only after results are
+host-materialized or ``jax.block_until_ready`` has passed; batched-vs-
+solo uses best-of-N (the noise-robust estimator) to survive this host's
+scheduler jitter.  The p95 comparison is *structural*, not a
+micro-timing: a wave over K distinct ``(model, bucket)`` groups holds
+every mid-wave arrival for K launches, while continuous admission holds
+it for ~1, so the gap survives timer noise.
 """
 from __future__ import annotations
 
@@ -45,16 +50,21 @@ SHAPE_MIX = [(10, 96, 0.4), (18, 72, 0.3), (27, 96, 0.2), (6, 48, 0.1)]
 #: Deep narrow feedforward net — the per-timestep lockstep pipeline is many
 #: small layer steps, which is exactly the fixed cost batching amortizes.
 SIZES = [96, 64, 64, 48, 48, 32, 32, 16, 16, 8]
+#: The second tenant for the multi-model scenario: different depth and
+#: input width, so it pads and buckets independently of the first.
+SIZES_B = [64, 48, 32, 24, 16, 8]
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
 
 
-def _parallel_network(lif):
+def _parallel_network(sizes, name, seed0=0):
     layers = []
-    for i in range(len(SIZES) - 1):
-        l = random_layer(SIZES[i], SIZES[i + 1], density=0.3, delay_range=3,
-                         seed=i, name=f"serve.l{i}")
-        l.lif = lif
+    for i in range(len(sizes) - 1):
+        l = random_layer(sizes[i], sizes[i + 1], density=0.3, delay_range=3,
+                         seed=seed0 + i, name=f"{name}.l{i}")
+        l.lif = LIF
         layers.append(l)
-    net = SNNNetwork(layers=layers, name="serve")
+    net = SNNNetwork(layers=layers, name=name)
     compiled = [
         SwitchingCompiler("parallel").compile_layer(l) for l in net.layers
     ]
@@ -85,11 +95,14 @@ def _best_of(fn, iters=7):
     return best
 
 
-def run(*, n_requests: int = 64, arrival_rate_hz: float = 800.0,
-        window_s: float = 0.02, micro_batch: int = 16) -> dict:
+# ---------------------------------------------------------------------------
+# Scenario 1 (PR 2): steady-state wave serving vs one-at-a-time dispatch
+# ---------------------------------------------------------------------------
+
+def run_steady_state(*, n_requests: int = 64, arrival_rate_hz: float = 800.0,
+                     window_s: float = 0.02, micro_batch: int = 16) -> dict:
     print("\n# serving engine (Poisson traffic, bucketed micro-batches)")
-    lif = LIFParams(alpha=0.5, v_th=64.0)
-    net, report = _parallel_network(lif)
+    net, report = _parallel_network(SIZES, "serve")
     rng = np.random.default_rng(0)
     traffic = poisson_traffic(rng, n_requests, arrival_rate_hz)
     true_steps = sum(sp.shape[0] for _, sp in traffic)
@@ -154,7 +167,7 @@ def run(*, n_requests: int = 64, arrival_rate_hz: float = 800.0,
     assert engine.pool.relowerings() == 0, engine.stats()
     assert batched_sps > solo_sps, (batched_sps, solo_sps)
 
-    result = {
+    return {
         "traffic": {
             "n_requests": n_requests,
             "arrival_rate_hz": arrival_rate_hz,
@@ -178,9 +191,261 @@ def run(*, n_requests: int = 64, arrival_rate_hz: float = 800.0,
         },
         "relowerings_after_warmup": engine.pool.relowerings(),
     }
+
+
+# ---------------------------------------------------------------------------
+# Scenario 2 (PR 3): continuous batching vs wave draining, two models,
+# mixed priorities, equal offered load
+# ---------------------------------------------------------------------------
+
+#: (steps, model, priority, deadline_ms) mix for the multi-tenant scenario.
+#: Priority 2 = interactive (generous deadline, must never shed here),
+#: priority 0 = bulk.  Two step shapes per model -> 4 (model, bucket)
+#: groups, so a full wave is always >= 4 scan launches.
+MIX_PRIO = [
+    (10, "a", 0, None, 0.35),
+    (18, "a", 2, 2000.0, 0.15),
+    (12, "b", 0, None, 0.35),
+    (20, "b", 2, 2000.0, 0.15),
+]
+
+
+def _prio_traffic(rng, n_requests, arrival_rate, widths, burst=16):
+    """Initial burst of ``burst`` requests at t=0, then Poisson arrivals.
+
+    ``arrival_rate`` is in requests per virtual launch unit.  The burst
+    seeds a backlog so wave draining actually forms multi-launch waves —
+    the regime the two modes differ in.
+    """
+    probs = np.array([m[4] for m in MIX_PRIO])
+    probs /= probs.sum()
+    arrivals = np.concatenate([
+        np.zeros(burst),
+        np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests - burst)),
+    ])
+    out = []
+    for t_arr in arrivals:
+        steps, model, prio, deadline, _ = MIX_PRIO[
+            rng.choice(len(MIX_PRIO), p=probs)
+        ]
+        n_in = widths[model]
+        sp = (rng.random((steps, n_in)) < 0.25).astype(np.float32)
+        out.append((float(t_arr), model, prio, deadline, sp))
+    return out
+
+
+def _virtual_replay(mode, traffic, widths, models, steps_mix, micro_batch):
+    """Replay the arrival trace in virtual time; every launch costs 1 unit.
+
+    The two modes differ only in scheduling structure, so the comparison
+    is made in *virtual launch units*: arrivals happen at the trace's
+    virtual timestamps and each fused-scan launch advances the clock by
+    exactly one unit.  The scans still execute for real (warm-path
+    counters, re-lowering invariants, and bit-identical replies are all
+    live), but the latency arithmetic is deterministic — independent of
+    this host's scheduler jitter — and reproducible from the trace seed.
+
+    ``mode="wave"``: snapshot the backlog, form all micro-batches, run
+    them back-to-back; arrivals during the wave wait for the whole wave.
+    ``mode="continuous"``: admit arrivals into open buckets, launch the
+    single most urgent bucket, look at the queue again.
+    """
+    from repro.serving import (
+        BucketKey, ExecutablePool, RequestQueue, ShapeBucketingScheduler,
+    )
+
+    q = RequestQueue()
+    sched = ShapeBucketingScheduler(
+        widths["a"], micro_batch=micro_batch, min_bucket_steps=8
+    )
+    pool = ExecutablePool()
+    for name, (net, rep) in models.items():
+        sched.set_model_input(name, widths[name])
+        pool.register(net, rep, name)
+        pool.warmup(
+            [
+                BucketKey(sched.bucket_steps(s), widths[name], micro_batch)
+                for s in steps_mix[name]
+            ],
+            name=name,
+        )
+    assert pool.relowerings() == 0
+
+    n = len(traffic)
+    sim, i = 0.0, 0
+    arrival_t, latency, replies, occupancy = {}, {}, {}, []
+
+    def submit_due():
+        nonlocal i
+        while i < n and traffic[i][0] <= sim:
+            _, model, prio, deadline, sp = traffic[i]
+            req = q.submit(sp, model=model, priority=prio,
+                           deadline_ms=deadline)
+            arrival_t[req.request_id] = (traffic[i][0], i)
+            i += 1
+
+    def run_mb(mb):
+        nonlocal sim
+        host = [np.asarray(z) for z in pool.run_microbatch(mb)]
+        sim += 1.0                      # one launch == one virtual time unit
+        occupancy.append(len(mb.requests))
+        for b, req in enumerate(mb.requests):
+            latency[req.request_id] = sim - arrival_t[req.request_id][0]
+            replies[req.request_id] = [z[: req.steps, b] for z in host]
+
+    while i < n or len(q) or sched.has_open():
+        submit_due()
+        if q.empty() and not sched.has_open():
+            sim = traffic[i][0]         # idle: jump to the next arrival
+            continue
+        if mode == "wave":
+            for mb in sched.form_microbatches(q.pop_all()):
+                run_mb(mb)              # no admission until the wave completes
+        else:
+            for req in q.pop_all():
+                sched.admit(req)
+            mb = sched.pop_launchable()
+            if mb is not None:
+                run_mb(mb)
+
+    assert pool.relowerings() == 0
+    idx_of = {rid: idx for rid, (_, idx) in arrival_t.items()}
+    return {
+        "latency": latency,             # rid -> launches waited
+        "replies": replies,
+        "idx_of": idx_of,
+        "launches": len(occupancy),
+        "mean_occupancy": float(np.mean(occupancy)),
+    }
+
+
+def _p95(values):
+    return float(np.percentile(np.asarray(values), 95))
+
+
+def run_continuous_vs_wave(*, n_requests: int = 96,
+                           micro_batch: int = 4,
+                           arrivals_per_launch: float = 3.0) -> dict:
+    print("\n# continuous batching vs wave draining "
+          "(two models, mixed priorities)")
+    net_a, rep_a = _parallel_network(SIZES, "tenant-a")
+    net_b, rep_b = _parallel_network(SIZES_B, "tenant-b", seed0=100)
+    models = {"a": (net_a, rep_a), "b": (net_b, rep_b)}
+    widths = {"a": SIZES[0], "b": SIZES_B[0]}
+    steps_mix = {"a": [10, 18], "b": [12, 20]}
+
+    # offered load: ~3 arrivals per launch against a capacity of
+    # micro_batch=4 per launch (~75%), so backlogs form and a wave holds
+    # several launches — the regime where the two modes differ
+    rng = np.random.default_rng(7)
+    traffic = _prio_traffic(rng, n_requests, arrivals_per_launch, widths)
+
+    runs, sections = {}, {}
+    for mode in ("wave", "continuous"):
+        out = _virtual_replay(mode, traffic, widths, models, steps_mix,
+                              micro_batch)
+        assert len(out["latency"]) == n_requests, (mode, len(out["latency"]))
+        lat_all = list(out["latency"].values())
+        by_prio = {}
+        for rid, lat in out["latency"].items():
+            prio = traffic[out["idx_of"][rid]][2]
+            by_prio.setdefault(prio, []).append(lat)
+        runs[mode] = out
+        sections[mode] = {
+            "p50_latency_launches": float(np.percentile(lat_all, 50)),
+            "p95_latency_launches": _p95(lat_all),
+            "p95_by_priority_launches": {
+                str(p): _p95(v) for p, v in sorted(by_prio.items())
+            },
+            "mean_batch_occupancy": out["mean_occupancy"],
+            "launches": out["launches"],
+        }
+        s = sections[mode]
+        print(f"  {mode:11s}: p50 {s['p50_latency_launches']:5.1f}  "
+              f"p95 {s['p95_latency_launches']:5.1f}  "
+              f"prio-2 p95 {s['p95_by_priority_launches']['2']:5.1f} "
+              f"(launches, virtual)  occupancy "
+              f"{s['mean_batch_occupancy']:.2f}  "
+              f"{s['launches']} launches total")
+
+    # -- replies bit-identical to solo runs (sample both models) -------------
+    checked = 0
+    cont = runs["continuous"]
+    for rid, reply in cont["replies"].items():
+        if checked >= 8:
+            break
+        _, model, _, _, sp = traffic[cont["idx_of"][rid]]
+        net, rep = models[model]
+        x = np.zeros((sp.shape[0], 1, widths[model]), np.float32)
+        x[:, 0, : sp.shape[1]] = sp
+        solo = network_executable(net, rep).run(x)
+        for got, want in zip(reply, solo):
+            np.testing.assert_array_equal(got, want[:, 0])
+        checked += 1
+    assert checked > 0
+
+    p95_wave = sections["wave"]["p95_latency_launches"]
+    p95_cont = sections["continuous"]["p95_latency_launches"]
+    hi_wave = sections["wave"]["p95_by_priority_launches"]["2"]
+    hi_cont = sections["continuous"]["p95_by_priority_launches"]["2"]
+    csv_row("serving_wave_p95", p95_wave, "unit=launches mode=wave")
+    csv_row("serving_continuous_p95", p95_cont,
+            "unit=launches mode=continuous")
+    csv_row("serving_continuous_gain", 0.0,
+            f"p95_wave_over_continuous={p95_wave / p95_cont:.2f}")
+    csv_row("serving_continuous_gain_prio2", 0.0,
+            f"p95_wave_over_continuous={hi_wave / hi_cont:.2f}")
+
+    # THE acceptance property: same offered load (identical trace),
+    # lower tail latency — overall and for the interactive class — at
+    # equal throughput (the same 96 requests in no more launches)
+    assert p95_cont < p95_wave, (p95_cont, p95_wave)
+    assert hi_cont < hi_wave, (hi_cont, hi_wave)
+    assert runs["continuous"]["launches"] <= runs["wave"]["launches"], (
+        runs["continuous"]["launches"], runs["wave"]["launches"]
+    )
+
+    print(f"  continuous p95 is {p95_wave / p95_cont:.2f}x lower than wave "
+          f"({hi_wave / hi_cont:.2f}x for priority 2) at the same offered "
+          f"load, in {runs['continuous']['launches']} vs "
+          f"{runs['wave']['launches']} launches")
+    return {
+        "traffic": {
+            "n_requests": n_requests,
+            "arrivals_per_launch": arrivals_per_launch,
+            "mix": [
+                {"steps": s, "model": m, "priority": p, "deadline_ms": d,
+                 "weight": w}
+                for s, m, p, d, w in MIX_PRIO
+            ],
+        },
+        "models": {"a": SIZES, "b": SIZES_B},
+        "micro_batch": micro_batch,
+        "latency_unit": "scan launches (virtual time; deterministic)",
+        "wave": sections["wave"],
+        "continuous": sections["continuous"],
+        "p95_wave_over_continuous": p95_wave / p95_cont,
+        "p95_wave_over_continuous_prio2": hi_wave / hi_cont,
+        "replies_checked_bit_identical": checked,
+    }
+
+
+def run(*, n_requests: int = 64, arrival_rate_hz: float = 800.0,
+        window_s: float = 0.02, micro_batch: int = 16) -> dict:
+    result = {
+        "steady_state": run_steady_state(
+            n_requests=n_requests, arrival_rate_hz=arrival_rate_hz,
+            window_s=window_s, micro_batch=micro_batch,
+        ),
+        "continuous_vs_wave": run_continuous_vs_wave(),
+    }
     _JSON_PATH.write_text(json.dumps(result, indent=2) + "\n")
-    print(f"wrote {_JSON_PATH.name} (batched {speedup:.2f}x vs one-at-a-time, "
-          f"hit rate {hit_rate:.0%})")
+    ss = result["steady_state"]["throughput"]
+    print(f"wrote {_JSON_PATH.name} "
+          f"(batched {ss['speedup_batched_vs_one_at_a_time']:.2f}x vs "
+          f"one-at-a-time; continuous p95 "
+          f"{result['continuous_vs_wave']['p95_wave_over_continuous']:.2f}x "
+          f"lower than wave)")
     return result
 
 

@@ -1,19 +1,24 @@
-"""End-to-end driver: batched SNN inference *service* on the switching system.
+"""End-to-end driver: continuous-batching SNN inference *service*.
 
-Simulates live traffic against the gesture-style network (paper §IV-C):
-independent requests with varying ``(steps, n_in)`` shapes arrive as a
-Poisson process and flow through the serving subsystem —
+Simulates live multi-tenant traffic against the gesture-style network
+(paper §IV-C): independent requests with varying ``(steps, n_in)``
+shapes, mixed priorities, and per-request deadlines arrive as a Poisson
+process and flow through the serving subsystem —
 
     RequestQueue -> ShapeBucketingScheduler -> ExecutablePool -> fused scan
+     (priority/EDF)   (slot-level admission)    (multi-model routing)
 
 The switching compiler picks the paradigm per layer with the
-extended-grid classifier; the serving engine pads each request into a
-power-of-two step bucket, micro-batches it with its bucket peers, and
-runs the whole mixed serial/parallel network as one jitted scan per
-micro-batch.  Steady-state traffic re-uses warmed jit entries — zero
-re-lowerings, zero re-traces — and every response is bit-identical to
-running that request alone (the executor's step-count mask keeps the
-padding inert).
+extended-grid classifier; the serving engine admits each request into a
+compatible open in-flight bucket *between scan launches* (continuous
+batching — no request waits out a full drain wave), micro-batches it
+with its bucket peers, and runs the whole mixed serial/parallel network
+as one jitted scan per launch.  A second registered model (the
+all-parallel compilation of the same network) serves part of the
+traffic to exercise multi-model routing.  Steady-state traffic re-uses
+warmed jit entries — zero re-lowerings, zero re-traces — and every
+response is bit-identical to running that request alone (the executor's
+step-count mask keeps the padding inert).
 
     PYTHONPATH=src python examples/serve_snn.py [--requests 64] [--steps 50]
 """
@@ -31,17 +36,20 @@ from repro.core import (
 )
 from repro.core.layer import LIFParams
 from repro.core.runtime import network_executable
-from repro.serving import ServingEngine
+from repro.serving import ServingEngine, ShedReply
 
 N_INPUT = 2048
+ALT_MODEL = "parallel-all"      # second tenant: all-parallel compilation
 
 
 def poisson_traffic(rng, n_requests, base_steps, rate, arrival_hz):
-    """Poisson arrivals of continuously variable-length requests.
+    """Poisson arrivals of variable-length, mixed-priority requests.
 
-    Every request draws its own step count from ``[base/2, 3*base/2]`` and
-    one of three input widths — the unconstrained-shape traffic a jit
-    cache cannot survive without the scheduler's bucketing.
+    Every request draws its own step count from ``[base/2, 3*base/2]``
+    and one of three input widths — the unconstrained-shape traffic a
+    jit cache cannot survive without the scheduler's bucketing.  ~30%
+    route to the second registered model; ~25% are interactive
+    (priority 2, 2 s deadline), the rest bulk (priority 0).
     """
     lo = max(2, base_steps // 2)
     hi = max(lo, base_steps + base_steps // 2)
@@ -52,7 +60,13 @@ def poisson_traffic(rng, n_requests, base_steps, rate, arrival_hz):
         steps = int(rng.integers(lo, hi + 1))
         n_in = int(rng.choice(width_mix))
         spikes = (rng.random((steps, n_in)) < rate).astype(np.float32)
-        traffic.append((float(t_arr), spikes))
+        model = ALT_MODEL if rng.random() < 0.3 else "default"
+        interactive = rng.random() < 0.25
+        traffic.append((
+            float(t_arr), spikes, model,
+            2 if interactive else 0,
+            2000.0 if interactive else None,
+        ))
     return (lo, hi), traffic
 
 
@@ -93,46 +107,71 @@ def main():
     rng = np.random.default_rng(0)
     (lo, hi), traffic = poisson_traffic(
         rng, args.requests, args.steps, args.rate, args.arrival_hz)
-    distinct = len({sp.shape for _, sp in traffic})
+    distinct = len({sp.shape for _, sp, *_ in traffic})
 
     engine = ServingEngine(net, reports["switched"],
                            micro_batch=args.micro_batch, min_bucket_steps=8)
     n_warmed = engine.warmup(list(range(lo, hi + 1)))
-    print(f"serving engine ready: warmed {n_warmed} bucket shapes covering "
-          f"steps {lo}..{hi} ({distinct} distinct request shapes inbound)")
+    # second tenant: the all-parallel compilation of the same network
+    engine.register_model(net, reports["parallel"], ALT_MODEL,
+                          warm_steps=list(range(lo, hi + 1)))
+    print(f"serving engine ready: 2 models, warmed {n_warmed} bucket shapes "
+          f"covering steps {lo}..{hi} "
+          f"({distinct} distinct request shapes inbound)")
 
-    # -- Poisson traffic through the engine ----------------------------------
+    # -- Poisson traffic, continuous batching --------------------------------
     print(f"serving {args.requests} Poisson-arrival requests "
-          f"({args.arrival_hz:.0f} req/s, micro-batch {args.micro_batch})...")
+          f"({args.arrival_hz:.0f} req/s, micro-batch {args.micro_batch}, "
+          f"continuous admission)...")
     results = {}
-    window, idx, window_s = 0.0, 0, 0.02
-    while idx < len(traffic):
-        window += window_s
-        while idx < len(traffic) and traffic[idx][0] <= window:
-            rid = engine.submit(traffic[idx][1])
-            results[rid] = traffic[idx][1]
+    idx, t0 = 0, time.perf_counter()
+    while idx < len(traffic) or not engine.queue.empty() \
+            or engine.scheduler.has_open():
+        now = time.perf_counter() - t0
+        while idx < len(traffic) and traffic[idx][0] <= now:
+            t_arr, spikes, model, prio, deadline = traffic[idx]
+            rid = engine.submit(spikes, model=model, priority=prio,
+                                deadline_ms=deadline)
+            results[rid] = (spikes, model)
             idx += 1
-        engine.drain()          # blocks until the device finished the window
+        if engine.queue.empty() and not engine.scheduler.has_open():
+            time.sleep(0.001)           # idle until the next arrival is due
+            continue
+        engine.step_continuous()        # admit arrivals, launch ONE bucket
     stats = engine.stats()
     print(f"  served {stats['requests']} requests in "
-          f"{stats['batches']} micro-batches "
+          f"{stats['batches']} launches "
           f"(mean occupancy {stats['mean_batch_occupancy']:.1f}, "
-          f"padding overhead {stats['padding_overhead']:.2f}x)")
+          f"padding overhead {stats['padding_overhead']:.2f}x, "
+          f"{stats['shed']} shed)")
     print(f"  latency p50 {stats['p50_ms']:.1f} ms, "
           f"p95 {stats['p95_ms']:.1f} ms "
           f"(mean queue wait {stats['mean_queue_wait_ms']:.1f} ms)")
+    for prio, cls in stats["latency_by_priority"].items():
+        print(f"    priority {prio}: {cls['requests']} requests, "
+              f"p50 {cls['p50_ms']:.1f} ms, p95 {cls['p95_ms']:.1f} ms")
+    if stats["deadline_miss_rate"] is not None:
+        print(f"  deadline-miss rate "
+              f"{stats['deadline_miss_rate']*100:.1f}%")
     print(f"  throughput {stats['throughput_request_steps_per_s']:,.0f} "
           f"request-steps/s, bucket-hit rate "
           f"{stats['bucket_hit_rate']*100:.0f}%, "
           f"{stats['relowerings']} re-lowerings")
+    for name, c in stats["by_model"].items():
+        print(f"    model {name:12s}: {c['bucket_hits']} hits / "
+              f"{c['bucket_misses']} misses, "
+              f"{c['warm_shapes']} warm shapes")
 
     # -- padding inertness: a served reply == running the request alone ------
+    rid, (spikes, model) = next(
+        (r, v) for r, v in results.items() if v[1] == "default"
+    )
     exe = network_executable(net, reports["switched"])
-    rid, spikes = next(iter(results.items()))
     solo_in = np.zeros((spikes.shape[0], 1, N_INPUT), np.float32)
     solo_in[:, 0, : spikes.shape[1]] = spikes
     solo = exe.run(solo_in)
     served = engine.results[rid]
+    assert not isinstance(served, ShedReply)
     same = all(
         np.array_equal(a, b[:, 0]) for a, b in zip(served, solo)
     )
@@ -145,7 +184,7 @@ def main():
     # warmed shapes.  Both sides host-materialize their replies and block
     # on the device before the clock stops.
     solo_inputs = []
-    for _, spikes in traffic:
+    for _, spikes, *_ in traffic:
         x = np.zeros((spikes.shape[0], 1, N_INPUT), np.float32)
         x[:, 0, : spikes.shape[1]] = spikes
         solo_inputs.append(x)
@@ -154,12 +193,12 @@ def main():
         jax.block_until_ready(exe.run(x))
     dt_solo = time.perf_counter() - t0
 
-    for _, spikes in traffic:
+    for _, spikes, *_ in traffic:
         engine.submit(spikes)
     t0 = time.perf_counter()
     engine.drain()              # host-materializes every reply
     dt_batched = time.perf_counter() - t0
-    true_steps = sum(sp.shape[0] for _, sp in traffic)
+    true_steps = sum(sp.shape[0] for _, sp, *_ in traffic)
     print(f"replaying the {args.requests} requests: bucketed+batched "
           f"{dt_batched*1e3:.1f} ms ({true_steps/dt_batched:,.0f} "
           f"request-steps/s) vs one-at-a-time dispatch "
@@ -169,7 +208,8 @@ def main():
 
     # classify each request by its most active output neuron
     klass = [int(res[-1].sum(axis=0).argmax())
-             for res in list(engine.results.values())[:16]]
+             for res in list(engine.results.values())[:16]
+             if not isinstance(res, ShedReply)]
     print(f"predicted gesture classes (first 16 requests): {klass}")
 
 

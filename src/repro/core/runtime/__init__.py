@@ -6,6 +6,7 @@ from .executor import (
     NetworkExecutable,
     get_layer_executable,
     network_executable,
+    release_network_executable,
 )
 from .network import run_network, run_network_layerwise
 
@@ -34,5 +35,6 @@ __all__ = [
     "ParallelExecutable", "lower_parallel", "run_parallel",
     "LayerMeta", "NetworkExecutable",
     "get_layer_executable", "network_executable",
+    "release_network_executable",
     "lowering_counts", "lowering_total",
 ]

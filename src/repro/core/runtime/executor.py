@@ -166,7 +166,14 @@ class NetworkExecutable:
         self.metas = tuple(metas)
         self.params = list(params)
         self.name = name
+        #: Serving-layer routing tag: the registered model name this
+        #: handle serves (set by ``network_executable(..., model=...)``).
+        self.model: str | None = None
         self._fns = {}   # interpret flag -> jitted scan
+
+    def jit_entries(self) -> int:
+        """Distinct jitted scan entries held by this handle."""
+        return len(self._fns)
 
     @classmethod
     def build(cls, net: SNNNetwork, report: CompileReport) -> "NetworkExecutable":
@@ -260,11 +267,39 @@ def _matches_network(exe: NetworkExecutable, net: SNNNetwork) -> bool:
 
 
 def network_executable(
-    net: SNNNetwork, report: CompileReport
+    net: SNNNetwork, report: CompileReport, model: str | None = None
 ) -> NetworkExecutable:
-    """The report's cached fused executable, (re)building when stale."""
+    """The report's cached fused executable, (re)building when stale.
+
+    ``model`` tags the handle with the serving-layer model name it is
+    keyed under (multi-model pools route by this name); the tag survives
+    rebuilds so diagnostics can attribute re-lowerings to a model.
+    """
     exe = report.executable
     if exe is None or not _matches_network(exe, net):
         exe = NetworkExecutable.build(net, report)
         report.executable = exe
+    if model is not None:
+        exe.model = model
     return exe
+
+
+def release_network_executable(report: CompileReport) -> int:
+    """Drop the report's fused executable and every per-layer lowering.
+
+    The eviction path of the serving pool: frees the host-side handles
+    (jit entries, lowered operand arrays) held for a model that fell out
+    of the LRU cap.  Returns the number of cache slots cleared.  The next
+    ``network_executable`` call on this report re-lowers from the compiled
+    programs — visible in ``lowering_counts`` — so eviction cost is never
+    hidden.
+    """
+    cleared = 0
+    if report.executable is not None:
+        report.executable = None
+        cleared += 1
+    for compiled in report.layers:
+        if compiled.executable is not None:
+            compiled.executable = None
+            cleared += 1
+    return cleared

@@ -1,31 +1,44 @@
-"""Batched inference serving over the fused network executor.
+"""Continuous-batching inference serving over the fused network executor.
 
 Turns independent, variable-shape spike-train requests into efficiently
 batched fused-scan executions:
 
     RequestQueue -> ShapeBucketingScheduler -> ExecutablePool -> device
-         (FIFO)        (pad + micro-batch)      (warmed jit entries)
+      (priority /      (pad + micro-batch,      (multi-model, LRU,
+       deadline)        slot-level admission)    warmed jit entries)
 
 with :class:`ServingEngine` as the facade and :class:`ServingMetrics`
-tracking latency, throughput, and bucket-hit rate.  See
-``docs/architecture.md`` ("Serving stack") for the data flow and the
-padding-inertness invariant.
+tracking latency (overall and per priority class), deadline misses,
+throughput, and bucket-hit rate.  Two batching modes: **wave draining**
+(``engine.drain()`` — the whole backlog in one gulp) and **continuous
+batching** (``engine.step_continuous()`` / ``serve_forever()`` — new
+requests join open in-flight buckets between scan launches).  See
+``docs/serving.md`` for the request lifecycle and tuning guidance.
 """
-from .engine import RequestResult, ServingEngine
-from .metrics import RequestRecord, ServingMetrics
-from .pool import ExecutablePool, PoolEntry
-from .queue import InferenceRequest, QueueFull, RequestQueue
+from .engine import Reply, RequestResult, ServingEngine, ShedReply
+from .metrics import RequestRecord, ServingMetrics, ShedRecord
+from .pool import ExecutablePool, PoolEntry, UnknownModel
+from .queue import (
+    DEFAULT_MODEL,
+    InferenceRequest,
+    QueueFull,
+    RequestQueue,
+    SNNRequest,
+)
 from .scheduler import (
     BucketKey,
     MicroBatch,
+    OpenBucket,
     ShapeBucketingScheduler,
     next_pow2,
 )
 
 __all__ = [
-    "ServingEngine", "RequestResult",
-    "ServingMetrics", "RequestRecord",
-    "ExecutablePool", "PoolEntry",
-    "RequestQueue", "InferenceRequest", "QueueFull",
-    "ShapeBucketingScheduler", "BucketKey", "MicroBatch", "next_pow2",
+    "ServingEngine", "RequestResult", "Reply", "ShedReply",
+    "ServingMetrics", "RequestRecord", "ShedRecord",
+    "ExecutablePool", "PoolEntry", "UnknownModel",
+    "RequestQueue", "SNNRequest", "InferenceRequest", "QueueFull",
+    "DEFAULT_MODEL",
+    "ShapeBucketingScheduler", "BucketKey", "MicroBatch", "OpenBucket",
+    "next_pow2",
 ]

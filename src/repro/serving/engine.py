@@ -1,44 +1,89 @@
 """ServingEngine — the facade tying queue, scheduler, pool, and metrics.
 
-Synchronous path (batch drivers, benchmarks)::
+Synchronous wave path (batch drivers, benchmarks)::
 
     engine = ServingEngine(net, report)
     rid = engine.submit(spikes)            # (steps, n_in) single request
     results = engine.drain()               # {rid: [per-layer (steps, n_l)]}
 
-Asynchronous path (live traffic)::
+Continuous-batching path (live traffic)::
 
-    async with background serve loop:
+    engine.register_model(net_b, report_b, "b", warm_steps=[16, 32])
+    rid = engine.submit(spikes, model="b", priority=2, deadline_ms=50.0)
+    engine.step_continuous()               # admit arrivals, launch ONE batch
+
+    async with background serve loop (continuous admission):
         out = await engine.submit_async(spikes)   # resolves when served
 
-``drain`` forms shape-bucketed, padded micro-batches from everything
-pending and runs each through the executable pool's warmed fused
-executables; results come back trimmed to every request's true
+``drain`` is **wave draining**: it takes everything pending in one gulp,
+forms all micro-batches, and runs them back-to-back — a request arriving
+mid-wave waits for the entire wave.  ``step_continuous`` is **continuous
+batching**: between any two scan launches it admits newly arrived
+requests into compatible open in-flight buckets and launches only the
+most urgent bucket, so admission latency is bounded by one launch, not
+one wave.  ``serve_forever`` runs the continuous loop by default.
+
+Expired requests (deadline passed before admission) are *shed*: the
+caller receives a :class:`ShedReply` through the same channel a result
+would have used — the sync results dict or the async future — never a
+silent drop.  Results come back trimmed to every request's true
 ``(steps, n_layer)`` shape, bit-identical to running that request alone
 (the executor's step-count mask keeps padding inert).
 """
 from __future__ import annotations
 
 import asyncio
+import dataclasses
 import time
 from collections import OrderedDict
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
 from ..core.layer import SNNNetwork
 from ..core.switching import CompileReport
-from .metrics import RequestRecord, ServingMetrics
-from .pool import ExecutablePool
-from .queue import InferenceRequest, RequestQueue
+from .metrics import RequestRecord, ServingMetrics, ShedRecord
+from .pool import ExecutablePool, PoolEntry, UnknownModel
+from .queue import DEFAULT_MODEL, RequestQueue, SNNRequest
 from .scheduler import BucketKey, MicroBatch, ShapeBucketingScheduler
 
 #: A served result: per-layer spike trains [(steps, n_l) ...], true length.
 RequestResult = List[np.ndarray]
 
 
+@dataclasses.dataclass
+class ShedReply:
+    """Delivered in place of a result when a request expired unserved.
+
+    Arrives wherever the result would have: the dict ``drain`` /
+    ``step_continuous`` returns (and ``engine.results``) on the sync
+    path, or the resolved future on the async path.  Check with
+    ``isinstance(reply, ShedReply)``.
+    """
+
+    request_id: int
+    model: str
+    priority: int
+    deadline_ms: float
+    waited_ms: float            # queue time it had already spent when shed
+
+    def __bool__(self) -> bool:        # a shed reply is a non-result
+        return False
+
+
+#: What one request gets back: its spike trains, or a shed notice.
+Reply = Union[RequestResult, ShedReply]
+
+
 class ServingEngine:
-    """Batched SNN inference serving over one compiled network."""
+    """Batched SNN inference serving over one or more compiled models.
+
+    The constructor registers ``net``/``report`` as the ``"default"``
+    model; :meth:`register_model` adds more.  ``max_models`` caps how
+    many models keep live (lowered + jitted) executables — beyond it the
+    least-recently-used model is evicted and revives cold on its next
+    request (see :class:`~repro.serving.pool.ExecutablePool`).
+    """
 
     def __init__(
         self,
@@ -49,6 +94,7 @@ class ServingEngine:
         min_bucket_steps: int = 8,
         max_pending: Optional[int] = None,
         max_retained_results: int = 4096,
+        max_models: Optional[int] = None,
         interpret: bool | None = None,
     ):
         self.queue = RequestQueue(max_pending=max_pending)
@@ -57,66 +103,179 @@ class ServingEngine:
             micro_batch=micro_batch,
             min_bucket_steps=min_bucket_steps,
         )
-        self.pool = ExecutablePool(interpret=interpret)
+        self.pool = ExecutablePool(interpret=interpret, max_models=max_models)
         self.pool.register(net, report)
         self.metrics = ServingMetrics()
         #: Sync-path replies, oldest evicted beyond ``max_retained_results``
         #: (async replies are delivered through their futures, not stored).
-        self.results: "OrderedDict[int, RequestResult]" = OrderedDict()
+        self.results: "OrderedDict[int, Reply]" = OrderedDict()
         self.max_retained_results = max_retained_results
         self._futures: Dict[int, asyncio.Future] = {}
         self._running = False
 
-    # -- warmup --------------------------------------------------------------
-    def warmup(self, step_counts: List[int]) -> int:
-        """Pre-compile the buckets the expected traffic mix lands in."""
+    # -- model registry ------------------------------------------------------
+    def register_model(
+        self,
+        net: SNNNetwork,
+        report: CompileReport,
+        name: str,
+        *,
+        warm_steps: Optional[List[int]] = None,
+    ) -> PoolEntry:
+        """Register a second (third, ...) compiled model under ``name``.
+
+        Requests route to it via ``submit(..., model=name)``.  The model
+        pads to *its own* input width, independent of the default
+        model's.  ``warm_steps`` optionally pre-compiles the buckets its
+        expected traffic lands in (same semantics as :meth:`warmup`).
+        """
+        self.scheduler.set_model_input(name, net.layers[0].n_source)
+        entry = self.pool.register(net, report, name)
+        if warm_steps:
+            self.warmup(warm_steps, model=name)
+        return entry
+
+    def warmup(
+        self, step_counts: List[int], model: str = DEFAULT_MODEL
+    ) -> int:
+        """Pre-compile the buckets the expected traffic mix lands in.
+
+        ``step_counts`` are *request* step counts; each is rounded to its
+        bucket.  Returns the number of bucket shapes newly compiled.
+        After warmup, steady-state traffic at those shapes is all bucket
+        hits with zero re-lowerings (``engine.stats()['relowerings']``).
+        """
+        width = self.scheduler.model_input(model)
         buckets = {
             BucketKey(
                 steps=self.scheduler.bucket_steps(s),
-                n_in=self.scheduler.n_input,
+                n_in=width,
                 batch=self.scheduler.micro_batch,
             )
             for s in step_counts
         }
-        return self.pool.warmup(sorted(buckets, key=lambda k: k.steps))
+        return self.pool.warmup(
+            sorted(buckets, key=lambda k: k.steps), name=model
+        )
 
-    # -- synchronous path ----------------------------------------------------
-    def submit(self, spikes: np.ndarray) -> int:
-        """Enqueue one (steps, n_in) request; returns its request id."""
-        if spikes.ndim != 2 or spikes.shape[1] > self.scheduler.n_input:
-            raise ValueError(
-                f"request must be (steps, n_in <= {self.scheduler.n_input}); "
-                f"got {np.shape(spikes)}"
+    # -- submission ----------------------------------------------------------
+    def submit(
+        self,
+        spikes: np.ndarray,
+        *,
+        model: str = DEFAULT_MODEL,
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
+    ) -> int:
+        """Enqueue one ``(steps, n_in)`` request; returns its request id.
+
+        ``model`` routes to a registered model (raises
+        :class:`~repro.serving.pool.UnknownModel`, a ``KeyError``, for
+        unknown names), ``priority`` orders dispatch (higher first,
+        FIFO within a class), and ``deadline_ms`` bounds how long past
+        enqueue the reply is still useful — expired requests are shed
+        with a :class:`ShedReply`, requests served late count toward
+        ``deadline_miss_rate``.
+        """
+        if model not in self.pool.models():
+            raise UnknownModel(
+                f"model {model!r} not registered; have {self.pool.models()}"
             )
-        return self.queue.submit(spikes).request_id
+        width = self.scheduler.model_input(model)
+        if np.ndim(spikes) != 2 or np.shape(spikes)[1] > width:
+            raise ValueError(
+                f"request must be (steps, n_in <= {width}) for model "
+                f"{model!r}; got {np.shape(spikes)}"
+            )
+        return self.queue.submit(
+            spikes, model=model, priority=priority, deadline_ms=deadline_ms
+        ).request_id
 
-    def drain(self) -> Dict[int, RequestResult]:
-        """Serve everything pending; returns {request_id: result}.
+    # -- wave path -----------------------------------------------------------
+    def drain(self) -> Dict[int, Reply]:
+        """Serve everything pending in one wave; returns {request_id: reply}.
+
+        Pops the entire backlog (dispatch order: priority desc, deadline
+        asc, arrival asc), sheds already-expired requests, admits the
+        rest — topping up any open continuous-mode buckets, so mixing
+        the two modes neither strands a request nor launches avoidably
+        half-empty scans — and runs every admitted micro-batch
+        back-to-back.
 
         Requests with a waiting ``submit_async`` future are resolved here
         (whoever calls drain), so a sync drain can never strand an async
         waiter.  Only futureless (sync-path) replies are retained in
         ``self.results``, bounded by ``max_retained_results``.
         """
-        served: Dict[int, RequestResult] = {}
-        pending = self.queue.pop_all()
-        for mb in self.scheduler.form_microbatches(pending):
+        served: Dict[int, Reply] = {}
+        # admit the backlog first so it tops up any open continuous-mode
+        # buckets (mixing the modes never launches avoidably half-empty
+        # padded scans), then launch everything admitted
+        self._admit_pending(served)
+        while True:
+            mb = self.scheduler.pop_launchable()
+            if mb is None:
+                break
             served.update(self._run_microbatch(mb))
-        for rid, result in served.items():
-            fut = self._futures.pop(rid, None)
-            if fut is not None:
-                self._resolve_future(fut, result)
-            else:
-                self.results[rid] = result
-        while len(self.results) > self.max_retained_results:
-            self.results.popitem(last=False)
+        self._deliver(served)
         return served
 
+    # -- continuous path -----------------------------------------------------
+    def step_continuous(self) -> Dict[int, Reply]:
+        """Admit arrivals into open buckets, launch ONE micro-batch.
+
+        The continuous-batching unit of work: everything pending joins a
+        compatible open in-flight bucket (expired requests are shed), the
+        most urgent bucket (full first, then priority / earliest
+        deadline) is closed and launched, and its replies are delivered.
+        Returns the delivered replies — empty dict when nothing was ready
+        to launch.
+        """
+        served: Dict[int, Reply] = {}
+        self._admit_pending(served)
+        mb = self.scheduler.pop_launchable()
+        if mb is not None:
+            served.update(self._run_microbatch(mb))
+        self._deliver(served)
+        return served
+
+    def _admit_pending(self, served: Dict[int, Reply]) -> None:
+        now = time.perf_counter()
+        for req in self.queue.pop_all():
+            if req.expired(now):
+                served[req.request_id] = self._shed(req, now)
+            else:
+                self.scheduler.admit(req)
+
+    # -- shedding ------------------------------------------------------------
+    def _shed(self, req: SNNRequest, now: float) -> ShedReply:
+        reply = ShedReply(
+            request_id=req.request_id,
+            model=req.model,
+            priority=req.priority,
+            deadline_ms=float(req.deadline_ms),
+            waited_ms=(now - req.t_enqueue) * 1e3,
+        )
+        # same field set by design; asdict keeps the two from drifting
+        self.metrics.record_shed(ShedRecord(**dataclasses.asdict(reply)))
+        return reply
+
+    # -- delivery ------------------------------------------------------------
+    def _deliver(self, served: Dict[int, Reply]) -> None:
+        for rid, reply in served.items():
+            fut = self._futures.pop(rid, None)
+            if fut is not None:
+                self._resolve_future(fut, reply)
+            else:
+                self.results[rid] = reply
+        while len(self.results) > self.max_retained_results:
+            self.results.popitem(last=False)
+
     @staticmethod
-    def _resolve_future(fut: asyncio.Future, result: RequestResult) -> None:
+    def _resolve_future(fut: asyncio.Future, reply: Reply) -> None:
         def _set():
             if not fut.done():
-                fut.set_result(result)
+                fut.set_result(reply)
 
         try:
             # schedules onto the future's own loop; safe from any thread,
@@ -143,30 +302,61 @@ class ServingEngine:
                     t_enqueue=req.t_enqueue,
                     t_dispatch=t_dispatch,
                     t_complete=t_complete,
+                    model=req.model,
+                    priority=req.priority,
+                    deadline_ms=req.deadline_ms,
                 )
             )
         self.metrics.record_batch(records)
         return served
 
     # -- asynchronous path ---------------------------------------------------
-    async def submit_async(self, spikes: np.ndarray) -> RequestResult:
-        """Enqueue and await the served result (needs ``serve_forever``)."""
+    async def submit_async(
+        self,
+        spikes: np.ndarray,
+        *,
+        model: str = DEFAULT_MODEL,
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
+    ) -> Reply:
+        """Enqueue and await the reply (needs a running ``serve_forever``
+        or someone calling ``drain`` / ``step_continuous``).
+
+        Resolves to the request's per-layer spike trains, or to a
+        :class:`ShedReply` if its deadline expired before admission.
+        """
         fut = asyncio.get_running_loop().create_future()
         # register the future before the request can possibly be drained —
         # submit and this registration run without an intervening await
-        rid = self.submit(spikes)
+        rid = self.submit(
+            spikes, model=model, priority=priority, deadline_ms=deadline_ms
+        )
         self._futures[rid] = fut
         return await fut
 
-    async def serve_forever(self, *, poll_interval: float = 0.001) -> None:
-        """Drain loop: batch whatever arrived; drain resolves the futures."""
+    async def serve_forever(
+        self, *, poll_interval: float = 0.001, mode: str = "continuous"
+    ) -> None:
+        """Serve until :meth:`stop`.
+
+        ``mode="continuous"`` (default) admits arrivals between every
+        scan launch (:meth:`step_continuous`); ``mode="wave"`` preserves
+        the PR-2 behavior of draining the whole backlog per iteration.
+        Replies are delivered through each request's future (async
+        submitters) or ``engine.results`` (sync submitters).
+        """
+        if mode not in ("continuous", "wave"):
+            raise ValueError(f"unknown serve mode {mode!r}")
         self._running = True
         try:
             while self._running:
-                if self.queue.empty():
+                if self.queue.empty() and not self.scheduler.has_open():
                     await asyncio.sleep(poll_interval)
                     continue
-                self.drain()
+                if mode == "continuous":
+                    self.step_continuous()
+                else:
+                    self.drain()
                 await asyncio.sleep(0)      # yield to submitters
         finally:
             self._running = False
@@ -176,8 +366,11 @@ class ServingEngine:
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> Dict:
-        return self.metrics.summary(
+        """One flat dict of serving health — see
+        :meth:`repro.serving.ServingMetrics.snapshot` for the keys."""
+        return self.metrics.snapshot(
             bucket_hits=self.pool.bucket_hits,
             bucket_misses=self.pool.bucket_misses,
             relowerings=self.pool.relowerings(),
+            by_model=self.pool.counters_by_model(),
         )

@@ -1,11 +1,14 @@
 """Serving metrics — per-request latency, throughput, bucketing efficiency.
 
-Every completed request contributes one :class:`RequestRecord`; the
-:class:`ServingMetrics` aggregate answers the questions the north star
-cares about: how long does a user wait (queue + execution latency
-percentiles), how much useful work flows (request-steps/s over the busy
+Every completed request contributes one :class:`RequestRecord`; every
+*shed* request (deadline expired before admission) contributes one
+:class:`ShedRecord`.  The :class:`ServingMetrics` aggregate answers the
+questions the north star cares about: how long does a user wait (queue +
+execution latency percentiles, overall and **per priority class**), how
+often do deadlines fail (shed rate + served-late rate = deadline-miss
+rate), how much useful work flows (request-steps/s over the busy
 window), and how well the bucketing policy amortizes compilation
-(bucket-hit rate, padding overhead).
+(bucket-hit rate, padding overhead, per-model counters).
 """
 from __future__ import annotations
 
@@ -18,7 +21,7 @@ import numpy as np
 
 @dataclasses.dataclass
 class RequestRecord:
-    """Timing of one request through queue -> scheduler -> pool."""
+    """Timing of one served request through queue -> scheduler -> pool."""
 
     request_id: int
     steps: int                  # true timesteps
@@ -28,6 +31,9 @@ class RequestRecord:
     t_enqueue: float
     t_dispatch: float           # micro-batch handed to the pool
     t_complete: float           # device done (block_until_ready passed)
+    model: str = "default"
+    priority: int = 0
+    deadline_ms: Optional[float] = None
 
     @property
     def queue_wait_s(self) -> float:
@@ -37,20 +43,41 @@ class RequestRecord:
     def latency_s(self) -> float:
         return self.t_complete - self.t_enqueue
 
+    @property
+    def deadline_missed(self) -> bool:
+        """Served, but after its deadline (False when no deadline)."""
+        if self.deadline_ms is None:
+            return False
+        return self.latency_s * 1e3 > self.deadline_ms
+
+
+@dataclasses.dataclass
+class ShedRecord:
+    """One request shed (expired before admission) — never silently dropped."""
+
+    request_id: int
+    model: str
+    priority: int
+    deadline_ms: float
+    waited_ms: float            # how long it sat in the queue before shedding
+
 
 class ServingMetrics:
     """Aggregates request records plus pool counters into one summary.
 
     Totals are cumulative counters; per-request records live in a bounded
     window (``max_records``) so a long-running engine cannot grow without
-    bound — percentiles and throughput describe the recent window.
+    bound — percentiles, miss rates, and throughput describe the recent
+    window.
     """
 
     def __init__(self, max_records: int = 65536):
         self.records: deque = deque(maxlen=max_records)
+        self.shed_records: deque = deque(maxlen=max_records)
         self.batches_dispatched = 0
         self.total_requests = 0
         self.total_request_steps = 0
+        self.total_shed = 0
 
     def record_batch(self, records: List[RequestRecord]) -> None:
         self.batches_dispatched += 1
@@ -58,20 +85,47 @@ class ServingMetrics:
         self.total_request_steps += sum(r.steps for r in records)
         self.records.extend(records)
 
+    def record_shed(self, record: ShedRecord) -> None:
+        self.total_shed += 1
+        self.shed_records.append(record)
+
     # -- aggregates ----------------------------------------------------------
     @property
     def n_requests(self) -> int:
         return self.total_requests
 
-    def latency_percentiles(self) -> Dict[str, float]:
-        if not self.records:
+    @staticmethod
+    def _percentiles(records) -> Dict[str, float]:
+        if not records:
             return {"p50_ms": 0.0, "p95_ms": 0.0, "max_ms": 0.0}
-        lat = np.array([r.latency_s for r in self.records]) * 1e3
+        lat = np.array([r.latency_s for r in records]) * 1e3
         return {
             "p50_ms": float(np.percentile(lat, 50)),
             "p95_ms": float(np.percentile(lat, 95)),
             "max_ms": float(lat.max()),
         }
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        return self._percentiles(self.records)
+
+    def latency_by_priority(self) -> Dict[int, Dict[str, float]]:
+        """p50/p95/max latency split per priority class (served requests)."""
+        by_class: Dict[int, list] = {}
+        for r in self.records:
+            by_class.setdefault(r.priority, []).append(r)
+        return {
+            p: {**self._percentiles(rs), "requests": len(rs)}
+            for p, rs in sorted(by_class.items())
+        }
+
+    def deadline_miss_rate(self) -> Optional[float]:
+        """(shed + served-late) / requests-with-deadline in the window."""
+        with_deadline = [r for r in self.records if r.deadline_ms is not None]
+        total = len(with_deadline) + len(self.shed_records)
+        if total == 0:
+            return None
+        missed = sum(r.deadline_missed for r in with_deadline)
+        return (missed + len(self.shed_records)) / total
 
     def throughput_request_steps_per_s(self) -> Optional[float]:
         """True (unpadded) request-steps per second over the busy window."""
@@ -89,16 +143,28 @@ class ServingMetrics:
         padded = sum(r.bucket_steps for r in self.records)
         return padded / real if real else None
 
-    def summary(
+    def snapshot(
         self,
         *,
         bucket_hits: int = 0,
         bucket_misses: int = 0,
         relowerings: int = 0,
+        by_model: Optional[Dict] = None,
     ) -> Dict:
+        """One flat summary dict of everything above.
+
+        Keys: ``requests``, ``shed``, ``batches``,
+        ``mean_batch_occupancy``, ``mean_queue_wait_ms``, ``p50_ms`` /
+        ``p95_ms`` / ``max_ms`` (overall), ``latency_by_priority``
+        (per-class percentiles), ``deadline_miss_rate`` (None when no
+        request carried a deadline), ``throughput_request_steps_per_s``,
+        ``padding_overhead``, bucket hit/miss counters (+ optional
+        ``by_model`` breakdown), and ``relowerings``.
+        """
         total = bucket_hits + bucket_misses
         out = {
             "requests": self.n_requests,
+            "shed": self.total_shed,
             "batches": self.batches_dispatched,
             "mean_batch_occupancy": (
                 float(np.mean([r.batch_occupancy for r in self.records]))
@@ -109,6 +175,8 @@ class ServingMetrics:
                 if self.records else 0.0
             ),
             **self.latency_percentiles(),
+            "latency_by_priority": self.latency_by_priority(),
+            "deadline_miss_rate": self.deadline_miss_rate(),
             "throughput_request_steps_per_s":
                 self.throughput_request_steps_per_s(),
             "padding_overhead": self.padding_overhead(),
@@ -117,4 +185,9 @@ class ServingMetrics:
             "bucket_hit_rate": bucket_hits / total if total else None,
             "relowerings": relowerings,
         }
+        if by_model is not None:
+            out["by_model"] = by_model
         return out
+
+    #: Backwards-compatible alias for :meth:`snapshot`.
+    summary = snapshot

@@ -1,11 +1,22 @@
-"""Executable pool — warmed fused executables, one jit entry per bucket.
+"""Executable pool — warmed fused executables routed by model name.
 
-The pool owns the mapping from a compiled model (``net`` + ``report``) to
-its fused :class:`~repro.core.runtime.NetworkExecutable` and tracks which
+The pool owns the mapping from a *registered model* (a ``net`` +
+``report`` pair under a name) to its fused
+:class:`~repro.core.runtime.NetworkExecutable` and tracks which
 ``(model, bucket-shape)`` pairs have already been traced and compiled.
 Steady-state traffic therefore never re-lowers a layer program and never
 re-traces a scan: a bucket *hit* reuses the cached jit entry, a *miss*
-pays one compile and warms the shape for every later request.
+pays one compile and warms the shape for every later request.  Hit/miss
+counters are kept both globally and split per model.
+
+Multi-tenancy is bounded by an **LRU cap** (``max_models``): when more
+models are registered than the cap allows, the least-recently-used
+model's executable handles are released
+(:func:`~repro.core.runtime.release_network_executable`) — its compiled
+programs stay registered, so a later request to that name *revives* it
+cold (one re-lowering pass + fresh traces, all visible in the counters)
+instead of failing.  This mirrors the paper's host-RAM economy: keep only
+the artifacts current traffic needs resident.
 
 Staleness flows through the runtime's own caches —
 :func:`~repro.core.runtime.network_executable` rebuilds when the network
@@ -16,65 +27,144 @@ re-lowering-free.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
 
 from ..core.layer import SNNNetwork
-from ..core.runtime import NetworkExecutable, lowering_total, network_executable
+from ..core.runtime import (
+    NetworkExecutable,
+    lowering_total,
+    network_executable,
+    release_network_executable,
+)
 from ..core.switching import CompileReport
+from .queue import DEFAULT_MODEL
 from .scheduler import BucketKey, MicroBatch
 
-DEFAULT_MODEL = "default"
+
+class UnknownModel(KeyError):
+    """Raised when a request routes to a model name never registered."""
 
 
 @dataclasses.dataclass
 class PoolEntry:
+    name: str
     net: SNNNetwork
     report: CompileReport
     warm_shapes: Set[Tuple[int, int, int]] = dataclasses.field(
         default_factory=set
     )
+    bucket_hits: int = 0
+    bucket_misses: int = 0
     #: The NetworkExecutable instance the warm set was built against; a
-    #: rebuild (network mutation) starts a fresh jit cache, so the warm
-    #: set must reset with it or "hits" would hide re-trace stalls.
+    #: rebuild (network mutation or post-eviction revival) starts a fresh
+    #: jit cache, so the warm set must reset with it or "hits" would hide
+    #: re-trace stalls.
     _warmed_exe: object = dataclasses.field(default=None, repr=False)
 
     @property
     def executable(self) -> NetworkExecutable:
-        exe = network_executable(self.net, self.report)
+        exe = network_executable(self.net, self.report, model=self.name)
         if exe is not self._warmed_exe:
             self.warm_shapes.clear()
             self._warmed_exe = exe
         return exe
 
+    @property
+    def n_input(self) -> int:
+        return self.net.layers[0].n_source
+
 
 class ExecutablePool:
-    """Named compiled models, each with a warmed jit entry per bucket shape."""
+    """Named compiled models, each with a warmed jit entry per bucket shape.
 
-    def __init__(self, *, interpret: bool | None = None):
+    ``max_models`` caps how many models keep *live* executables at once
+    (LRU on use); ``None`` means unbounded.  Registration itself is never
+    evicted — only the lowered/jitted handles — so every registered name
+    stays routable forever.
+    """
+
+    def __init__(
+        self,
+        *,
+        interpret: bool | None = None,
+        max_models: Optional[int] = None,
+    ):
+        if max_models is not None and max_models < 1:
+            raise ValueError("max_models must be >= 1 or None")
         self.interpret = interpret
-        self._entries: Dict[str, PoolEntry] = {}
-        self.bucket_hits = 0
-        self.bucket_misses = 0
+        self.max_models = max_models
+        #: LRU order: least-recently-used first.
+        self._entries: "OrderedDict[str, PoolEntry]" = OrderedDict()
+        self.evictions = 0
+        self.revivals = 0
+        self._evicted_warm: Dict[str, int] = {}   # name -> warmed shapes lost
         self._lower_mark = lowering_total()
 
     # -- model registry ------------------------------------------------------
     def register(
         self, net: SNNNetwork, report: CompileReport, name: str = DEFAULT_MODEL
     ) -> PoolEntry:
-        entry = PoolEntry(net=net, report=report)
+        """Register ``name`` and eagerly lower its layers (warm the handle)."""
+        entry = PoolEntry(name=name, net=net, report=report)
         self._entries[name] = entry
+        self._entries.move_to_end(name)
         entry.executable            # lower every layer now, not on first hit
+        self._enforce_cap(keep=name)
         self._lower_mark = lowering_total()
         return entry
 
     def entry(self, name: str = DEFAULT_MODEL) -> PoolEntry:
-        return self._entries[name]
+        """The named entry, touched as most-recently-used; revives if evicted.
+
+        An evicted model still routes: touching it re-lowers its programs
+        (counted in :meth:`relowerings` until the next warmup) and starts
+        a cold jit cache, then evicts whichever model is now LRU.
+        """
+        try:
+            entry = self._entries[name]
+        except KeyError:
+            raise UnknownModel(
+                f"model {name!r} not registered; have {self.models()}"
+            ) from None
+        self._entries.move_to_end(name)
+        if entry.report.executable is None:       # evicted -> revive cold
+            self.revivals += 1
+            entry.executable
+            self._enforce_cap(keep=name)
+        return entry
 
     def models(self) -> List[str]:
         return list(self._entries)
+
+    def _enforce_cap(self, keep: str) -> None:
+        if self.max_models is None:
+            return
+        live = [
+            n for n, e in self._entries.items()
+            if e.report.executable is not None
+        ]
+        while len(live) > self.max_models:
+            victim = next(n for n in live if n != keep)
+            live.remove(victim)
+            self.evict(victim)
+
+    def evict(self, name: str) -> int:
+        """Release ``name``'s executable handles; keeps it registered.
+
+        Returns the number of cache slots cleared.  The warmed-shape set
+        is recorded so metrics can report how much warmup an eviction
+        destroyed.
+        """
+        entry = self._entries[name]
+        self._evicted_warm[name] = len(entry.warm_shapes)
+        entry.warm_shapes.clear()
+        entry._warmed_exe = None
+        self.evictions += 1
+        return release_network_executable(entry.report)
 
     # -- execution -----------------------------------------------------------
     def warmup(
@@ -106,21 +196,22 @@ class ExecutablePool:
     def run_microbatch(
         self,
         micro_batch: MicroBatch,
-        name: str = DEFAULT_MODEL,
+        name: Optional[str] = None,
         *,
         block: bool = True,
     ):
         """Run one padded micro-batch; returns per-layer device arrays.
 
+        Routes to ``micro_batch.model`` unless ``name`` overrides it.
         With ``block`` (default) the call returns only after the device
         finishes, so wall-clock around it measures real execution time.
         """
-        entry = self.entry(name)
+        entry = self.entry(name if name is not None else micro_batch.model)
         exe = entry.executable          # refreshes the warm set if rebuilt
         if micro_batch.key.shape in entry.warm_shapes:
-            self.bucket_hits += 1
+            entry.bucket_hits += 1
         else:
-            self.bucket_misses += 1
+            entry.bucket_misses += 1
             entry.warm_shapes.add(micro_batch.key.shape)
         outs = exe.run_device(
             micro_batch.spikes,
@@ -131,11 +222,51 @@ class ExecutablePool:
             outs = jax.block_until_ready(outs)
         return outs
 
+    # -- counters ------------------------------------------------------------
+    @property
+    def bucket_hits(self) -> int:
+        return sum(e.bucket_hits for e in self._entries.values())
+
+    @property
+    def bucket_misses(self) -> int:
+        return sum(e.bucket_misses for e in self._entries.values())
+
+    def counters_by_model(self) -> Dict[str, Dict[str, int]]:
+        """Per-model bucket hit/miss, warm-state, and eviction counters.
+
+        ``jit_entries`` counts the distinct traced scans the model's live
+        executable holds; ``evicted_warm_shapes`` is how much warmup the
+        model's last eviction destroyed (what a revival has to re-pay).
+        """
+        return {
+            name: {
+                "bucket_hits": e.bucket_hits,
+                "bucket_misses": e.bucket_misses,
+                "warm_shapes": len(e.warm_shapes),
+                "resident": e.report.executable is not None,
+                "jit_entries": (
+                    e.report.executable.jit_entries()
+                    if e.report.executable is not None else 0
+                ),
+                "evicted_warm_shapes": self._evicted_warm.get(name, 0),
+            }
+            for name, e in self._entries.items()
+        }
+
     # -- invariants ----------------------------------------------------------
     def relowerings(self) -> int:
         """Layer lowerings since the last register/warmup — steady state: 0."""
         return lowering_total() - self._lower_mark
 
-    def hit_rate(self) -> Optional[float]:
-        total = self.bucket_hits + self.bucket_misses
-        return self.bucket_hits / total if total else None
+    def hit_rate(self, name: Optional[str] = None) -> Optional[float]:
+        if name is None:
+            hits, misses = self.bucket_hits, self.bucket_misses
+        else:
+            e = self._entries.get(name)
+            if e is None:
+                raise UnknownModel(
+                    f"model {name!r} not registered; have {self.models()}"
+                )
+            hits, misses = e.bucket_hits, e.bucket_misses
+        total = hits + misses
+        return hits / total if total else None

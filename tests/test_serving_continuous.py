@@ -1,0 +1,429 @@
+"""Continuous batching, priorities, deadlines, and multi-model routing.
+
+The PR-3 serving semantics under test:
+
+* priority-queue dispatch order (priority desc, EDF, FIFO) and
+  deadline-aware shedding — an expired request always gets a
+  :class:`ShedReply`, never a silent drop, on both sync and async paths;
+* slot-level admission — requests join compatible open in-flight buckets
+  between scan launches, full buckets roll over without losing anyone;
+* multi-model routing — interleaved traffic to two registered models
+  produces replies bit-identical to each model's solo runs (the PR-2
+  isolation property extended across models), with per-model counters;
+* LRU eviction — beyond ``max_models`` the coldest model's executables
+  are released and revive on demand, visibly (counters, re-lowerings).
+"""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import SwitchingCompiler, random_layer
+from repro.core.layer import LIFParams, SNNNetwork
+from repro.core.runtime import network_executable
+from repro.core.switching import CompileReport
+from repro.serving import (
+    ExecutablePool,
+    RequestQueue,
+    ServingEngine,
+    ShapeBucketingScheduler,
+    ShedReply,
+    UnknownModel,
+)
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+
+def mixed_net(sizes, rng, start="serial"):
+    layers = []
+    for i in range(len(sizes) - 1):
+        l = random_layer(
+            sizes[i], sizes[i + 1],
+            density=float(rng.uniform(0.2, 0.7)),
+            delay_range=int(rng.integers(1, 6)),
+            seed=int(rng.integers(0, 2**31)),
+        )
+        l.lif = LIF
+        layers.append(l)
+    net = SNNNetwork(layers=layers)
+    order = ("serial", "parallel") if start == "serial" else ("parallel", "serial")
+    report = CompileReport(layers=[
+        SwitchingCompiler(order[i % 2]).compile_layer(l)
+        for i, l in enumerate(net.layers)
+    ])
+    return net, report
+
+
+def solo_run(net, report, request):
+    """One request alone through the fused executable (the ground truth)."""
+    n_input = net.layers[0].n_source
+    x = np.zeros((request.shape[0], 1, n_input), np.float32)
+    x[:, 0, : request.shape[1]] = request
+    return [z[:, 0] for z in network_executable(net, report).run(x)]
+
+
+def spikes_for(rng, steps, n_in):
+    return (rng.random((steps, n_in)) < 0.3).astype(np.float32)
+
+
+# -- priority queue ordering --------------------------------------------------
+
+def test_queue_priority_then_edf_then_fifo():
+    q = RequestQueue()
+    lo1 = q.submit(np.ones((2, 4), np.float32), priority=0)
+    hi_late_deadline = q.submit(
+        np.ones((2, 4), np.float32), priority=2, deadline_ms=1000.0
+    )
+    lo2 = q.submit(np.ones((2, 4), np.float32), priority=0)
+    hi_tight_deadline = q.submit(
+        np.ones((2, 4), np.float32), priority=2, deadline_ms=10.0
+    )
+    mid = q.submit(np.ones((2, 4), np.float32), priority=1)
+    order = [r.request_id for r in q.pop_all()]
+    # priority desc; within priority 2 the tighter deadline first;
+    # within priority 0 plain FIFO
+    assert order == [
+        hi_tight_deadline.request_id, hi_late_deadline.request_id,
+        mid.request_id, lo1.request_id, lo2.request_id,
+    ]
+
+
+def test_queue_rejects_nonpositive_deadline():
+    q = RequestQueue()
+    with pytest.raises(ValueError):
+        q.submit(np.ones((2, 4), np.float32), deadline_ms=0.0)
+
+
+# -- slot-level admission -----------------------------------------------------
+
+def test_admission_joins_open_bucket_and_rolls_over_when_full():
+    s = ShapeBucketingScheduler(8, micro_batch=2, min_bucket_steps=4)
+    q = RequestQueue()
+    r1, r2, r3 = (q.submit(np.ones((3, 8), np.float32)) for _ in range(3))
+    b1 = s.admit(r1)
+    b2 = s.admit(r2)
+    assert b1 is b2                      # joined the same open bucket
+    s.admit(r3)                         # full bucket rolled over, none lost
+    assert s.open_requests() == 3
+    first = s.pop_launchable()
+    assert [r.request_id for r in first.requests] == [r1.request_id,
+                                                      r2.request_id]
+    second = s.pop_launchable()
+    assert [r.request_id for r in second.requests] == [r3.request_id]
+    assert s.pop_launchable() is None and not s.has_open()
+
+
+def test_launch_order_full_first_then_priority():
+    """Occupancy leads launch order; priority decides among partials.
+
+    Full buckets launch before an urgent singleton (preemptive launches
+    pay their empty slots out of everyone's throughput — see
+    ``OpenBucket.urgency``); the urgent request still waits only the
+    backlog of *full* buckets, never a drain wave, and heads every
+    partial launch.
+    """
+    s = ShapeBucketingScheduler(8, micro_batch=2, min_bucket_steps=4)
+    q = RequestQueue()
+    full_a = q.submit(np.ones((9, 8), np.float32), priority=0)
+    full_b = q.submit(np.ones((9, 8), np.float32), priority=0)
+    urgent = q.submit(np.ones((3, 8), np.float32), priority=9)
+    bulk = q.submit(np.ones((5, 8), np.float32), priority=0)
+    for r in (full_a, full_b, urgent, bulk):
+        s.admit(r)
+    assert s.pop_launchable().requests == [full_a, full_b]
+    # among partial buckets, the urgent one goes before older bulk
+    assert s.pop_launchable().requests == [urgent]
+    assert s.pop_launchable().requests == [bulk]
+
+
+def test_priority_orders_partial_bucket_launches():
+    s = ShapeBucketingScheduler(8, micro_batch=4, min_bucket_steps=4)
+    q = RequestQueue()
+    lo = q.submit(np.ones((3, 8), np.float32), priority=0)
+    hi = q.submit(np.ones((9, 8), np.float32), priority=5)
+    s.admit(lo)
+    s.admit(hi)
+    assert s.pop_launchable().requests == [hi]
+    assert s.pop_launchable().requests == [lo]
+
+
+def test_step_continuous_launches_one_batch_and_admits_between():
+    rng = np.random.default_rng(3)
+    net, report = mixed_net([16, 10], rng)
+    engine = ServingEngine(net, report, micro_batch=4, min_bucket_steps=4)
+    reqs = {engine.submit(spikes_for(rng, 3, 16)): None for _ in range(2)}
+    served1 = engine.step_continuous()       # launches the partial bucket
+    assert set(served1) == set(reqs)
+    # nothing left: a further step is a no-op
+    assert engine.step_continuous() == {}
+    # arrivals between launches join a fresh open bucket immediately
+    rid = engine.submit(spikes_for(rng, 3, 16))
+    served2 = engine.step_continuous()
+    assert set(served2) == {rid}
+    for srv in (served1, served2):
+        for r in srv.values():
+            assert not isinstance(r, ShedReply)
+
+
+def test_continuous_replies_bit_identical_to_solo():
+    rng = np.random.default_rng(11)
+    net, report = mixed_net([20, 14, 8], rng, start="parallel")
+    engine = ServingEngine(net, report, micro_batch=3, min_bucket_steps=4)
+    requests = {}
+    for _ in range(7):
+        sp = spikes_for(rng, int(rng.integers(2, 13)), 20)
+        requests[engine.submit(sp, priority=int(rng.integers(0, 3)))] = sp
+    served = {}
+    while len(served) < len(requests):
+        out = engine.step_continuous()
+        assert len(out) <= engine.scheduler.micro_batch
+        served.update(out)
+    for rid, sp in requests.items():
+        for got, want in zip(served[rid], solo_run(net, report, sp)):
+            np.testing.assert_array_equal(got, want)
+
+
+# -- deadlines: shed and served-late ------------------------------------------
+
+def test_expired_request_gets_shed_reply_sync():
+    rng = np.random.default_rng(5)
+    net, report = mixed_net([12, 8], rng)
+    engine = ServingEngine(net, report, micro_batch=2, min_bucket_steps=4)
+    ok = engine.submit(spikes_for(rng, 4, 12))
+    doomed = engine.submit(spikes_for(rng, 4, 12), deadline_ms=1.0)
+    time.sleep(0.01)                     # let the 1 ms deadline pass
+    served = engine.drain()
+    assert set(served) == {ok, doomed}   # never a silent drop
+    shed = served[doomed]
+    assert isinstance(shed, ShedReply) and not shed
+    assert shed.request_id == doomed and shed.waited_ms >= 1.0
+    assert not isinstance(served[ok], ShedReply)
+    # the shed reply is retained for sync pickup like any other
+    assert engine.results[doomed] is shed
+    stats = engine.stats()
+    assert stats["shed"] == 1 and stats["requests"] == 1
+    assert stats["deadline_miss_rate"] == 1.0    # 1 shed / 1 with deadline
+
+
+def test_expired_request_gets_shed_reply_async():
+    rng = np.random.default_rng(7)
+    net, report = mixed_net([12, 8], rng)
+    engine = ServingEngine(net, report, micro_batch=2, min_bucket_steps=4)
+
+    async def main():
+        task = asyncio.ensure_future(
+            engine.submit_async(spikes_for(rng, 4, 12), deadline_ms=1.0)
+        )
+        await asyncio.sleep(0.01)
+        engine.step_continuous()
+        return await asyncio.wait_for(task, timeout=5.0)
+
+    reply = asyncio.run(main())
+    assert isinstance(reply, ShedReply)
+    assert engine.stats()["shed"] == 1
+    assert not engine.results              # delivered via the future only
+
+
+def test_served_late_counts_as_deadline_miss_but_is_served():
+    rng = np.random.default_rng(9)
+    net, report = mixed_net([12, 8], rng)
+    engine = ServingEngine(net, report, micro_batch=2, min_bucket_steps=4)
+    sp = spikes_for(rng, 4, 12)
+    # generous deadline: admitted fine, but the (cold-compile) launch
+    # takes far longer than 1e-6 ms... use a deadline that passes after
+    # admission: submit, admit into a bucket, then stall before launch.
+    rid = engine.submit(sp, deadline_ms=5.0)
+    engine._admit_pending({})            # admitted while still live
+    time.sleep(0.01)                     # deadline passes in-flight
+    served = engine.step_continuous()
+    assert not isinstance(served[rid], ShedReply)   # served, not shed
+    for got, want in zip(served[rid], solo_run(net, report, sp)):
+        np.testing.assert_array_equal(got, want)
+    stats = engine.stats()
+    assert stats["shed"] == 0
+    assert stats["deadline_miss_rate"] == 1.0       # served late
+
+
+def test_latency_by_priority_classes():
+    rng = np.random.default_rng(13)
+    net, report = mixed_net([12, 8], rng)
+    engine = ServingEngine(net, report, micro_batch=4, min_bucket_steps=4)
+    for p in (0, 0, 1, 2, 2, 2):
+        engine.submit(spikes_for(rng, 4, 12), priority=p)
+    engine.drain()
+    by_prio = engine.stats()["latency_by_priority"]
+    assert set(by_prio) == {0, 1, 2}
+    assert by_prio[0]["requests"] == 2
+    assert by_prio[1]["requests"] == 1
+    assert by_prio[2]["requests"] == 3
+    for cls in by_prio.values():
+        assert cls["p95_ms"] >= cls["p50_ms"] >= 0.0
+
+
+# -- multi-model routing ------------------------------------------------------
+
+def test_multi_model_interleaved_bit_identical_to_solo():
+    """The PR-2 isolation property, extended across two models.
+
+    Two models with different layer stacks and input widths serve an
+    interleaved request stream; every reply must be bit-identical to the
+    solo run on its own model, in both wave and continuous modes.
+    """
+    rng = np.random.default_rng(21)
+    net_a, rep_a = mixed_net([16, 12, 6], rng)
+    net_b, rep_b = mixed_net([24, 10], rng, start="parallel")
+    engine = ServingEngine(net_a, rep_a, micro_batch=3, min_bucket_steps=4)
+    engine.register_model(net_b, rep_b, "b")
+
+    def traffic(n):
+        out = []
+        for i in range(n):
+            model = "default" if i % 2 == 0 else "b"
+            width = 16 if model == "default" else 24
+            sp = spikes_for(rng, int(rng.integers(2, 10)),
+                            int(rng.integers(width // 2, width + 1)))
+            out.append((model, sp))
+        return out
+
+    # wave mode
+    sent = {engine.submit(sp, model=m): (m, sp) for m, sp in traffic(8)}
+    served = engine.drain()
+    assert set(served) == set(sent)
+    # continuous mode
+    sent2 = {engine.submit(sp, model=m): (m, sp) for m, sp in traffic(8)}
+    while not all(rid in served for rid in sent2):
+        served.update(engine.step_continuous())
+    sent.update(sent2)
+    for rid, (model, sp) in sent.items():
+        net, rep = (net_a, rep_a) if model == "default" else (net_b, rep_b)
+        want = solo_run(net, rep, sp)
+        assert len(served[rid]) == len(net.layers)
+        for got, w in zip(served[rid], want):
+            np.testing.assert_array_equal(got, w)
+    by_model = engine.stats()["by_model"]
+    assert set(by_model) == {"default", "b"}
+    for counters in by_model.values():
+        assert counters["bucket_hits"] + counters["bucket_misses"] > 0
+
+
+def test_same_width_models_never_share_a_microbatch():
+    rng = np.random.default_rng(23)
+    net_a, rep_a = mixed_net([12, 8], rng)
+    net_b, rep_b = mixed_net([12, 8], rng, start="parallel")
+    engine = ServingEngine(net_a, rep_a, micro_batch=8, min_bucket_steps=4)
+    engine.register_model(net_b, rep_b, "b")
+    for m in ("default", "b", "default", "b"):
+        engine.submit(spikes_for(rng, 4, 12), model=m)
+    engine.drain()
+    # same (steps, n_in, batch) bucket, but routed separately: 2 batches
+    assert engine.metrics.batches_dispatched == 2
+    assert engine.stats()["by_model"]["b"]["bucket_misses"] >= 1
+
+
+def test_submit_to_unknown_model_raises():
+    rng = np.random.default_rng(25)
+    net, report = mixed_net([12, 8], rng)
+    engine = ServingEngine(net, report)
+    with pytest.raises(KeyError):
+        engine.submit(spikes_for(rng, 4, 12), model="nope")
+
+
+def test_model_specific_input_width_validation():
+    rng = np.random.default_rng(27)
+    net_a, rep_a = mixed_net([8, 6], rng)
+    net_b, rep_b = mixed_net([32, 6], rng)
+    engine = ServingEngine(net_a, rep_a)
+    engine.register_model(net_b, rep_b, "wide")
+    engine.submit(spikes_for(rng, 4, 32), model="wide")   # fits wide model
+    with pytest.raises(ValueError):
+        engine.submit(spikes_for(rng, 4, 32))             # too wide for default
+
+
+# -- LRU eviction -------------------------------------------------------------
+
+def test_pool_lru_eviction_and_revival():
+    rng = np.random.default_rng(31)
+    net_a, rep_a = mixed_net([10, 8], rng)
+    net_b, rep_b = mixed_net([14, 6], rng)
+    pool = ExecutablePool(max_models=1)
+    pool.register(net_a, rep_a, "a")
+    assert rep_a.executable is not None
+    pool.register(net_b, rep_b, "b")        # evicts a (LRU)
+    assert pool.evictions == 1
+    assert rep_a.executable is None          # handles released
+    assert rep_a.layers[0].executable is None
+    assert rep_b.executable is not None
+    assert pool.models() == ["a", "b"]       # registration survives eviction
+
+    entry_a = pool.entry("a")                # revive on demand, evicts b
+    assert pool.revivals == 1 and pool.evictions == 2
+    assert rep_a.executable is not None and rep_b.executable is None
+    assert pool.relowerings() > 0            # revival cost is visible
+    assert entry_a.warm_shapes == set()      # cold: warm set reset
+    assert rep_a.executable.model == "a"     # handle tagged per model
+    counters = pool.counters_by_model()
+    assert counters["a"]["resident"] and not counters["b"]["resident"]
+    assert counters["a"]["jit_entries"] == 0     # revived cold: no traces yet
+    assert counters["b"]["jit_entries"] == 0     # evicted: nothing live
+
+
+def test_engine_eviction_keeps_replies_correct():
+    rng = np.random.default_rng(33)
+    net_a, rep_a = mixed_net([10, 8], rng)
+    net_b, rep_b = mixed_net([14, 6], rng)
+    engine = ServingEngine(net_a, rep_a, micro_batch=2, min_bucket_steps=4,
+                           max_models=1)
+    engine.register_model(net_b, rep_b, "b")     # evicts default
+    sp_b = spikes_for(rng, 4, 14)
+    sp_a = spikes_for(rng, 4, 10)
+    rid_b = engine.submit(sp_b, model="b")
+    served = engine.drain()
+    rid_a = engine.submit(sp_a)                  # revives default, evicts b
+    served.update(engine.drain())
+    assert engine.pool.evictions >= 2 and engine.pool.revivals >= 1
+    by_model = engine.stats()["by_model"]
+    assert by_model["b"]["evicted_warm_shapes"] >= 0    # eviction cost keyed
+    assert by_model["default"]["jit_entries"] >= 1      # resident + traced
+    for got, want in zip(served[rid_b], solo_run(net_b, rep_b, sp_b)):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(served[rid_a], solo_run(net_a, rep_a, sp_a)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_unknown_model_entry_raises_unknown_model():
+    pool = ExecutablePool()
+    with pytest.raises(UnknownModel):
+        pool.entry("ghost")
+
+
+# -- async continuous serving with priorities --------------------------------
+
+def test_serve_forever_continuous_mixed_priorities():
+    rng = np.random.default_rng(35)
+    net, report = mixed_net([16, 12, 8], rng)
+    engine = ServingEngine(net, report, micro_batch=3, min_bucket_steps=4)
+    requests = [
+        (spikes_for(rng, int(rng.integers(2, 12)), 16), p)
+        for p in (0, 2, 1, 0, 2, 1, 0, 2)
+    ]
+
+    async def client():
+        results = await asyncio.gather(*(
+            engine.submit_async(sp, priority=p) for sp, p in requests
+        ))
+        engine.stop()
+        return results
+
+    async def main():
+        server = asyncio.ensure_future(engine.serve_forever())
+        results = await client()
+        await server
+        return results
+
+    results = asyncio.run(main())
+    for (sp, _), got in zip(requests, results):
+        assert not isinstance(got, ShedReply)
+        for a, b in zip(got, solo_run(net, report, sp)):
+            np.testing.assert_array_equal(a, b)
+    assert engine.stats()["requests"] == len(requests)

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Docs checker: intra-repo markdown links resolve, python snippets compile.
+
+Run from anywhere; paths resolve against the repo root (this file's
+parent's parent).  Checks:
+
+1. every relative link/image target in the repo root's ``*.md`` and
+   ``docs/*.md`` points at a file or directory that exists (external
+   ``http(s)://``, ``mailto:``, and pure ``#anchor`` links are skipped);
+2. every fenced code block opened with ```` ```python ```` in those
+   files parses as Python (``compile()`` — the snippet equivalent of
+   ``python -m py_compile`` on the extracted block).
+
+Exit status 0 when clean; 1 with one line per finding otherwise.
+Used by the CI ``docs`` job and ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+#: Inline links/images: [text](target) — target captured up to the first
+#: unescaped ')'; reference-style links are rare here and not used.
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files():
+    return sorted(
+        [*REPO.glob("*.md"), *(REPO / "docs").glob("*.md")]
+    )
+
+
+def check_links(path: Path):
+    """Yield 'file: broken link ...' findings for one markdown file."""
+    text = path.read_text()
+    # links inside fenced code blocks are code, not navigation
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in _LINK_RE.findall(text):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            yield (
+                f"{path.relative_to(REPO)}: broken link '{target}' "
+                f"(no such file {rel!r} relative to {path.parent.name}/)"
+            )
+
+
+def python_snippets(text: str):
+    """(start_line, source) for every ```python fenced block.
+
+    An unterminated fence still yields its content (closed at EOF), so a
+    forgotten closing ``` cannot smuggle an unchecked snippet past CI.
+    """
+    lines = text.splitlines()
+    block, start = None, 0
+    for i, line in enumerate(lines, 1):
+        stripped = line.strip()
+        if block is None:
+            if stripped.startswith("```python"):
+                block, start = [], i + 1
+        elif stripped.startswith("```"):
+            yield start, "\n".join(block)
+            block = None
+        else:
+            block.append(line)
+    if block is not None:
+        yield start, "\n".join(block)
+
+
+def check_snippets(path: Path, snippets):
+    """Yield 'file:line: snippet does not compile' findings."""
+    for start, source in snippets:
+        try:
+            compile(source, f"{path.name}:{start}", "exec")
+        except SyntaxError as e:
+            yield (
+                f"{path.relative_to(REPO)}:{start}: python snippet does "
+                f"not compile: {e.msg} (snippet line {e.lineno})"
+            )
+
+
+def main() -> int:
+    findings = []
+    files = doc_files()
+    n_snippets = 0
+    for path in files:
+        findings.extend(check_links(path))
+        snippets = list(python_snippets(path.read_text()))
+        n_snippets += len(snippets)
+        findings.extend(check_snippets(path, snippets))
+    for f in findings:
+        print(f"FAIL {f}")
+    print(
+        f"checked {len(files)} markdown files, {n_snippets} python "
+        f"snippets: {len(findings)} problem(s)"
+    )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
