@@ -3,9 +3,13 @@
 Times the same compiled mixed-paradigm report through both execution modes
 (interpret mode on the CPU host; TPU is the target), counts
 ``lower_serial``/``lower_parallel`` invocations, and asserts the fused
-path's executable cache lowers each layer exactly once per report.  Writes
-``BENCH_network.json`` at the repo root so the perf trajectory is tracked
-across PRs.
+path's executable cache lowers each layer exactly once per report.
+``run_batch_sweep`` additionally scales the request batch 1/4/16/64
+through serial-only vs parallel-only networks and all three serial kernel
+modes (event-forced / dense-forced / cost-model auto), pinning the
+dense-fallback crossover the executor records in
+``CompileReport.serial_forms``.  Both write into ``BENCH_network.json`` at
+the repo root so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -19,6 +23,7 @@ from repro.core import SwitchingCompiler
 from repro.core.layer import LIFParams, SNNNetwork, random_layer
 from repro.core.runtime import (
     lowering_counts,
+    network_executable,
     run_network,
     run_network_layerwise,
 )
@@ -27,6 +32,18 @@ from repro.core.switching import CompileReport
 from .common import csv_row, timeit
 
 _JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_network.json"
+
+
+def _merge_json(update: dict) -> None:
+    """Update ``BENCH_network.json`` in place, keeping other sections."""
+    data = {}
+    if _JSON_PATH.exists():
+        try:
+            data = json.loads(_JSON_PATH.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data.update(update)
+    _JSON_PATH.write_text(json.dumps(data, indent=2) + "\n")
 
 
 def _mixed_network(sizes, density, delay_range, lif):
@@ -139,10 +156,119 @@ def run(*, steps: int = 40, batch: int = 8) -> dict:
         "lower_calls_fused_repeat_run": fused_relowers,
         "lower_calls_layerwise_per_run": layerwise_lowers,
     }
-    _JSON_PATH.write_text(json.dumps(result, indent=2) + "\n")
+    _merge_json(result)
     print(f"wrote {_JSON_PATH.name} (speedup {speedup:.2f}x)")
     return result
 
 
+def _uniform_network(sizes, paradigm, density, delay_range, lif):
+    layers = []
+    for i in range(len(sizes) - 1):
+        l = random_layer(sizes[i], sizes[i + 1], density, delay_range,
+                         seed=i, name=f"sweep.{paradigm}.l{i}")
+        l.lif = lif
+        layers.append(l)
+    net = SNNNetwork(layers=layers, name=f"sweep-{paradigm}")
+    compiled = [
+        SwitchingCompiler(paradigm).compile_layer(l) for l in net.layers
+    ]
+    return net, CompileReport(layers=compiled)
+
+
+def run_batch_sweep(
+    *, steps: int = 20, batches=(1, 4, 16, 64), sizes=None
+) -> dict:
+    """Batch-scaling sweep: serial vs parallel paradigm, all kernel modes.
+
+    The serial paradigm's event form (``segment_sum`` scatter) scales
+    super-linearly in batch on the host backend; the dense fallback
+    restores parallel-like scaling.  ``auto`` lets the cost model pick per
+    layer and the sweep records which form the executor chose
+    (``CompileReport.serial_forms``) next to the measured curves, so the
+    crossover constants stay honest.  Merged into ``BENCH_network.json``
+    under ``"batch_sweep"``.
+    """
+    print("\n# batch scaling sweep (serial kernel forms vs parallel-only)")
+    lif = LIFParams(alpha=0.5, v_th=64.0)
+    sizes = list(sizes or [192, 160, 128, 96, 64])
+    density, delay_range = 0.3, 4
+    rng = np.random.default_rng(0)
+
+    nets = {
+        p: _uniform_network(sizes, p, density, delay_range, lif)
+        for p in ("serial", "parallel")
+    }
+    exes = {p: network_executable(net, rep) for p, (net, rep) in nets.items()}
+
+    sweep = {
+        "sizes": sizes, "density": density, "delay_range": delay_range,
+        "steps": steps, "batches": list(batches),
+        "crossover_batch_per_serial_layer": [
+            round(exes["serial"].cost_model.crossover_batch(
+                m.n_rows, m.n_source, m.n_target, m.delay_range), 2)
+            for m in exes["serial"].metas
+        ],
+        "points": [],
+    }
+
+    modes = [("serial", "event"), ("serial", "dense"), ("serial", "auto"),
+             ("parallel", "auto")]
+    for batch in batches:
+        spikes = (rng.random((steps, batch, sizes[0])) < 0.2).astype(
+            np.float32
+        )
+        row = {"batch": batch}
+        for paradigm, form in modes:
+            exe = exes[paradigm]
+            us = timeit(
+                lambda: jax.block_until_ready(
+                    exe.run_device(spikes, serial_form=form)
+                ),
+                warmup=1, iters=3,
+            )
+            sps = steps * batch / (us / 1e6)
+            key = f"{paradigm}_{form}"
+            row[f"{key}_us"] = us
+            row[f"{key}_batch_timesteps_per_s"] = sps
+            if paradigm == "serial" and form == "auto":
+                _, rep = nets["serial"]
+                row["auto_forms"] = list(
+                    rep.serial_forms[("fused", batch)]
+                )
+            csv_row(f"network_sweep_{key}_b{batch}", us,
+                    f"batch_timesteps_per_s={sps:.0f}")
+        sweep["points"].append(row)
+
+    first, last = sweep["points"][0], sweep["points"][-1]
+    # the cost model must actually switch across the sweep: event-driven
+    # solo requests, dense once batch crosses the recorded crossover
+    assert "event" in first["auto_forms"], first
+    assert "dense" in last["auto_forms"], last
+    ratio = (
+        last["parallel_auto_batch_timesteps_per_s"]
+        / last["serial_auto_batch_timesteps_per_s"]
+    )
+    sweep["serial_vs_parallel_at_max_batch"] = ratio
+    blowup = (
+        last["serial_event_us"] / last["serial_dense_us"]
+    )
+    sweep["event_vs_dense_at_max_batch"] = blowup
+    # dense fallback keeps mixed nets batchable: serial-paradigm
+    # throughput at the largest batch stays within 2x of parallel-only
+    # (the event form alone blows up super-linearly)
+    assert ratio < 2.0, (
+        f"serial paradigm {ratio:.2f}x behind parallel at batch "
+        f"{last['batch']} — dense fallback not engaging?"
+    )
+    _merge_json({"batch_sweep": sweep})
+    print(
+        f"wrote {_JSON_PATH.name} batch_sweep (serial within {ratio:.2f}x "
+        f"of parallel at batch {last['batch']}; event form {blowup:.1f}x "
+        f"slower than dense there)"
+    )
+    return sweep
+
+
 if __name__ == "__main__":
     run()
+    run_batch_sweep()

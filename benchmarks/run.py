@@ -9,6 +9,8 @@
   §IV motivation -> bench_compile_time (prejudge vs compile-both)
   kernels  -> bench_kernels          (Pallas kernels + runtime throughput)
   runtime  -> bench_network          (fused single-scan vs per-layer -> BENCH_network.json)
+  batching -> bench_network.run_batch_sweep (serial kernel forms vs parallel
+              across batch 1/4/16/64 -> BENCH_network.json "batch_sweep")
   serving  -> bench_serving          (batched Poisson serving -> BENCH_serving.json)
 
 ``PYTHONPATH=src python -m benchmarks.run [--fast] [--seeds N]``
@@ -49,6 +51,7 @@ def main() -> None:
     bench_compile_time.run()
     bench_kernels.run()
     bench_network.run()
+    bench_network.run_batch_sweep()
     bench_serving.run()
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
 

@@ -20,6 +20,7 @@ Interpretation notes (documented in DESIGN.md §2 "assumptions changed"):
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Dict
 
@@ -120,6 +121,91 @@ def parallel_subordinate_overhead(
 
 def total(cost: Dict[str, float]) -> float:
     return float(sum(cost.values()))
+
+
+# --- serial-paradigm batch crossover (accelerator adaptation) ---------------
+#
+# Not a Table-I row: this models the *JAX runtime* cost of the two serial
+# kernel forms so the fused executor can pick per batch size.  The
+# event-driven form is one flat ``(B*R)`` ``segment_sum`` scatter — work
+# proportional to synaptic rows, but with poor locality that degrades
+# super-linearly in batch on the host backend (the segment-id space grows as
+# ``B * d_slots * n_target``).  The dense fallback is a ``(B,S) x (S,
+# d_slots*T)`` matmul — ``d_slots/density`` times more MACs, each far
+# cheaper and perfectly batched.  Dense wins once
+# ``batch^exponent * density`` crosses ``(mac/scatter) * d_slots``.
+
+
+@dataclasses.dataclass(frozen=True)
+class SerialBatchCostModel:
+    """Relative per-timestep cost of the serial paradigm's two kernel forms.
+
+    Coefficients are unitless ratios fitted to the CPU batch-scaling sweep
+    in ``benchmarks/bench_network.py`` (``BENCH_network.json`` records the
+    measured curves next to the model's decisions so drift is visible);
+    they deliberately err toward the event form at batch 1 so solo
+    requests keep the paper's event-driven semantics on the hot path.
+
+    * ``scatter_coeff`` — cost of one scattered ``(batch, row)`` element
+      relative to one dense MAC (random-access accumulate vs FMA).
+    * ``batch_exponent`` — super-linearity of the flat segment-sum in
+      batch (1.0 = perfectly linear; measured ~1.5 on the CPU backend).
+    * ``mac_coeff`` — cost of one dense MAC (the unit).
+    """
+
+    scatter_coeff: float = 16.0
+    batch_exponent: float = 1.5
+    mac_coeff: float = 1.0
+
+    def event_cost(self, n_rows: int, batch: int) -> float:
+        """Relative cost of one event-form timestep at this batch."""
+        return self.scatter_coeff * n_rows * float(batch) ** self.batch_exponent
+
+    def dense_cost(
+        self, n_source: int, n_target: int, delay_range: int, batch: int
+    ) -> float:
+        """Relative cost of one dense-form timestep at this batch."""
+        return self.mac_coeff * batch * n_source * (delay_range + 1) * n_target
+
+    def prefer_dense(
+        self,
+        n_rows: int,
+        n_source: int,
+        n_target: int,
+        delay_range: int,
+        batch: int,
+    ) -> bool:
+        """Should ``serial_step`` switch to the dense matmul form?"""
+        if n_rows == 0:
+            return False         # empty layer: nothing to scatter
+        return self.event_cost(n_rows, batch) > self.dense_cost(
+            n_source, n_target, delay_range, batch
+        )
+
+    def crossover_batch(
+        self, n_rows: int, n_source: int, n_target: int, delay_range: int
+    ) -> float:
+        """Smallest batch at which the dense form wins (``inf`` if never).
+
+        Solves ``event_cost(batch) == dense_cost(batch)``; because both
+        sides share a factor of ``batch``, the crossover depends on
+        ``batch^(exponent-1)`` against ``(mac/scatter) * (d_slots /
+        density)`` — i.e. the denser the layer (higher row *rate* per
+        dense element), the earlier dense wins.
+        """
+        if n_rows == 0:
+            return math.inf
+        ratio = (
+            self.mac_coeff * n_source * (delay_range + 1) * n_target
+        ) / (self.scatter_coeff * n_rows)
+        if self.batch_exponent <= 1.0:
+            return 1.0 if ratio < 1.0 else math.inf
+        return max(1.0, ratio ** (1.0 / (self.batch_exponent - 1.0)))
+
+
+#: Default crossover model used by the fused executor; fitted to the
+#: CPU batch sweep (see ``BENCH_network.json`` -> ``batch_sweep``).
+DEFAULT_SERIAL_BATCH_COST = SerialBatchCostModel()
 
 
 def equal_parts(n: int, cap: int) -> list:

@@ -1,5 +1,11 @@
 from .reference import LIFState, init_state, run_reference
-from .serial_runtime import SerialExecutable, lower_serial, run_serial
+from .serial_runtime import (
+    SerialExecutable,
+    dense_serial_weights,
+    lower_serial,
+    run_serial,
+    serial_step_dense,
+)
 from .parallel_runtime import ParallelExecutable, lower_parallel, run_parallel
 from .executor import (
     LayerMeta,
@@ -32,6 +38,7 @@ __all__ = [
     "run_network", "run_network_layerwise",
     "LIFState", "init_state", "run_reference",
     "SerialExecutable", "lower_serial", "run_serial",
+    "serial_step_dense", "dense_serial_weights",
     "ParallelExecutable", "lower_parallel", "run_parallel",
     "LayerMeta", "NetworkExecutable",
     "get_layer_executable", "network_executable",

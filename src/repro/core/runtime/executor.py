@@ -18,24 +18,49 @@ the accelerator:
 This replaces the per-layer execution mode (kept as
 :func:`repro.core.runtime.network.run_network_layerwise`) that ran N
 independent scans with a host sync and a fresh lowering between layers.
+
+Batched and sharded execution (see ``docs/architecture.md``):
+
+* :meth:`NetworkExecutable.run_device` — the fused path: one scan whose
+  per-step kernels batch internally over the request axis.
+* :meth:`NetworkExecutable.run_batched` — the vmapped path: one scan per
+  request, ``jax.vmap``-ed over the request axis, ``valid_steps`` masking
+  preserved per lane.  Bit-identical to the fused path (integer
+  accumulation), but lets XLA batch each request's program independently.
+* Serial layers pick between the event-driven ``segment_sum`` form and
+  the dense matmul fallback per launch batch
+  (:class:`repro.core.cost_model.SerialBatchCostModel`); the choice is
+  recorded in ``CompileReport.serial_forms`` and never changes outputs.
+* :meth:`NetworkExecutable.shard` places the lowered weight/delay
+  operands by the logical-axis rules in
+  :mod:`repro.distributed.sharding` (``snn_rules``: batch -> data,
+  neurons -> model); on a single device it is the identity fallback.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...distributed import sharding as shardlib
+from ..cost_model import DEFAULT_SERIAL_BATCH_COST, SerialBatchCostModel
 from ..layer import LIFParams, SNNNetwork
 from ..parallel_compiler import ParallelProgram
 from ..serial_compiler import SerialProgram
 from ..switching import CompiledLayer, CompileReport
 from .parallel_runtime import ParallelExecutable, lower_parallel, parallel_step
 from .reference import init_state
-from .serial_runtime import SerialExecutable, lower_serial, serial_step
+from .serial_runtime import (
+    SerialExecutable,
+    dense_serial_weights,
+    lower_serial,
+    serial_step,
+    serial_step_dense,
+)
 
 
 def get_layer_executable(
@@ -71,6 +96,9 @@ class LayerMeta:
     delay_range: int
     alpha: float
     v_th: float
+    #: Event volume: synaptic rows (serial) / WDM columns (parallel); feeds
+    #: the serial dense-fallback crossover decision.
+    n_rows: int = 0
 
     @property
     def ring_depth(self) -> int:
@@ -100,6 +128,7 @@ def _init_carry(metas: Tuple[LayerMeta, ...], batch: int):
 
 def _scan_network(
     metas: Tuple[LayerMeta, ...],
+    forms: Tuple[str, ...],       # per layer: "event" | "dense" | "-"
     interpret: bool | None,
     params: List[Tuple[jnp.ndarray, ...]],
     spikes: jnp.ndarray,          # (T, B, n_input) f32
@@ -128,9 +157,10 @@ def _scan_network(
         t, states = carry
         x = x_t
         new_states, outs = [], []
-        for meta, p, st in zip(metas, params, states):
+        for meta, form, p, st in zip(metas, forms, params, states):
             if meta.paradigm == "serial":
-                st, z = serial_step(
+                step_fn = serial_step_dense if form == "dense" else serial_step
+                st, z = step_fn(
                     *p, st, x, t,
                     delay_range=meta.delay_range, n_target=meta.n_target,
                     alpha=meta.alpha, v_th=meta.v_th, interpret=interpret,
@@ -154,6 +184,45 @@ def _scan_network(
     return outs
 
 
+def _batched_scan(
+    metas: Tuple[LayerMeta, ...],
+    forms: Tuple[str, ...],
+    interpret: bool | None,
+    params: List[Tuple[jnp.ndarray, ...]],
+    spikes: jnp.ndarray,          # (T, B, n_input) f32
+    valid_steps: jnp.ndarray | None = None,   # (B,) i32
+):
+    """``jax.vmap`` of the single-request scan over the request axis.
+
+    Each request runs its own width-1 scan; vmap batches them.  The
+    per-lane ``valid_steps`` mask is preserved, so lanes with 0 valid
+    steps (padded slots) emit exact zeros just like the fused path.
+    """
+
+    def one(sp, vs):              # sp (T, n_in), vs () i32 or None
+        outs = _scan_network(
+            metas, forms, interpret, params, sp[:, None, :],
+            None if vs is None else vs[None],
+        )
+        return tuple(z[:, 0] for z in outs)
+
+    if valid_steps is None:
+        return jax.vmap(lambda sp: one(sp, None), in_axes=1, out_axes=1)(
+            spikes
+        )
+    return jax.vmap(one, in_axes=(1, 0), out_axes=1)(spikes, valid_steps)
+
+
+def _param_axes(meta: LayerMeta, form: str) -> Tuple[Tuple, ...]:
+    """Logical-axis names per operand array (for ``snn_rules`` placement)."""
+    if meta.paradigm == "serial":
+        if form == "dense":
+            return ((None, None, "neurons"),)      # (d_slots, S, T)
+        return (("rows",),) * 4                    # weight/delay/src/tgt
+    # parallel: wdm_stack (n_target, C), col_source (C,), col_delay (C,)
+    return (("neurons", "cols"), ("cols",), ("cols",))
+
+
 class NetworkExecutable:
     """A whole compiled network, lowered once, runnable in one device scan."""
 
@@ -162,6 +231,9 @@ class NetworkExecutable:
         metas: Tuple[LayerMeta, ...],
         params: List[Tuple[jnp.ndarray, ...]],
         name: str = "snn",
+        *,
+        report: CompileReport | None = None,
+        cost_model: SerialBatchCostModel | None = None,
     ):
         self.metas = tuple(metas)
         self.params = list(params)
@@ -169,7 +241,15 @@ class NetworkExecutable:
         #: Serving-layer routing tag: the registered model name this
         #: handle serves (set by ``network_executable(..., model=...)``).
         self.model: str | None = None
-        self._fns = {}   # interpret flag -> jitted scan
+        #: The report this executable was built from; launch paths record
+        #: their serial kernel-form decisions into ``report.serial_forms``.
+        self.report = report
+        #: Crossover model deciding event vs dense serial form per batch.
+        self.cost_model = cost_model or DEFAULT_SERIAL_BATCH_COST
+        self._fns = {}       # (path, interpret, forms) -> jitted scan
+        self._dense = {}     # layer index -> (d_slots, S, T) dense operand
+        self._mesh = None    # set by shard(); None = identity fallback
+        self._rules = None
 
     def jit_entries(self) -> int:
         """Distinct jitted scan entries held by this handle."""
@@ -190,32 +270,141 @@ class NetworkExecutable:
                     delay_range=exe.delay_range,
                     alpha=exe.lif.alpha,
                     v_th=exe.lif.v_th,
+                    n_rows=int(
+                        exe.row_weight.shape[0]
+                        if isinstance(exe, SerialExecutable)
+                        else exe.col_source.shape[0]
+                    ),
                 )
             )
             params.append(_layer_params(exe))
-        return cls(tuple(metas), params, name=getattr(net, "name", "snn"))
+        return cls(
+            tuple(metas), params, name=getattr(net, "name", "snn"),
+            report=report,
+        )
 
     @property
     def n_input(self) -> int:
         return self.metas[0].n_source
 
-    def run_device(
-        self,
-        spikes: np.ndarray,        # (T, B, n_input) 0/1
-        *,
-        valid_steps: np.ndarray | None = None,   # (B,) true steps per request
-        interpret: bool | None = None,
-    ) -> Tuple[jnp.ndarray, ...]:
-        """Per-layer spike trains as device arrays — no host sync.
+    # -- serial kernel-form selection ----------------------------------------
+    def serial_forms(
+        self, batch: int, serial_form: str = "auto"
+    ) -> Tuple[str, ...]:
+        """Per-layer kernel form at this batch: "event"|"dense" ("-" = parallel).
 
-        Callers that time this must ``jax.block_until_ready`` the result.
-        With ``valid_steps``, batch slot ``b`` is masked after its first
-        ``valid_steps[b]`` timesteps: the live prefix is bit-identical to an
-        unmasked run and every padded timestep emits exact zeros, so padded
-        micro-batches are provably inert per request.
+        ``serial_form`` forces every serial layer onto one form
+        ("event" / "dense"); "auto" asks the cost model per layer —
+        dense once ``batch`` crosses
+        :meth:`~repro.core.cost_model.SerialBatchCostModel.crossover_batch`.
         """
-        if not self.metas:
-            return ()
+        if serial_form not in ("auto", "event", "dense"):
+            raise ValueError(f"unknown serial_form {serial_form!r}")
+        forms = []
+        for meta in self.metas:
+            if meta.paradigm != "serial":
+                forms.append("-")
+            elif serial_form != "auto":
+                forms.append(serial_form)
+            else:
+                forms.append(
+                    "dense"
+                    if self.cost_model.prefer_dense(
+                        meta.n_rows, meta.n_source, meta.n_target,
+                        meta.delay_range, batch,
+                    )
+                    else "event"
+                )
+        return tuple(forms)
+
+    def _dense_param(self, i: int) -> Tuple[jnp.ndarray, ...]:
+        """The layer's dense-form operand, built once and cached."""
+        w = self._dense.get(i)
+        if w is None:
+            meta, p = self.metas[i], self.params[i]
+            exe = SerialExecutable(
+                n_source=meta.n_source, n_target=meta.n_target,
+                delay_range=meta.delay_range,
+                row_weight=p[0], row_delay=p[1], row_src=p[2], row_tgt=p[3],
+                lif=LIFParams(alpha=meta.alpha, v_th=meta.v_th),
+            )
+            w = jnp.asarray(dense_serial_weights(exe))
+            w = self._place(w, _param_axes(meta, "dense")[0])
+            self._dense[i] = w
+        return (w,)
+
+    def _params_for(self, forms: Tuple[str, ...]) -> List[Tuple]:
+        return [
+            self._dense_param(i) if form == "dense" else p
+            for i, (form, p) in enumerate(zip(forms, self.params))
+        ]
+
+    def _record_forms(
+        self, path: str, batch: int, forms: Tuple[str, ...]
+    ) -> None:
+        if self.report is not None:
+            self.report.serial_forms[(path, batch)] = forms
+
+    # -- sharding ------------------------------------------------------------
+    @property
+    def mesh(self):
+        """The mesh params are placed on (None = single-device identity)."""
+        return self._mesh
+
+    def shard(self, mesh=None, rules: dict | None = None) -> "NetworkExecutable":
+        """Place the lowered operands by the SNN logical-axis rules.
+
+        Routes every layer's weight/delay operands through
+        :func:`repro.distributed.sharding.snn_rules` (neurons -> model,
+        rows -> model; the launch paths place the request batch on the
+        data axis).  With one visible device (:func:`snn_mesh` returns
+        ``None``) this is the **identity fallback**: no placement happens
+        and outputs are unchanged — CPU CI exercises the same call.
+        Returns ``self`` for chaining.
+        """
+        mesh = shardlib.snn_mesh() if mesh is None else mesh
+        self._rules = rules or shardlib.snn_rules()
+        self._mesh = mesh
+        if mesh is None:
+            return self
+        from jax.sharding import NamedSharding
+
+        def place(arr, axes):
+            spec = shardlib.spec_for_shape(axes, self._rules, arr.shape, mesh)
+            return jax.device_put(arr, NamedSharding(mesh, spec))
+
+        self.params = [
+            tuple(
+                place(arr, ax)
+                for arr, ax in zip(p, _param_axes(meta, "event"))
+            )
+            for meta, p in zip(self.metas, self.params)
+        ]
+        # dense operands and jitted entries were traced/placed against the
+        # old layout; rebuild both lazily
+        self._dense.clear()
+        self._fns.clear()
+        return self
+
+    def _place(self, arr, axes):
+        if self._mesh is None:
+            return arr
+        from jax.sharding import NamedSharding
+
+        spec = shardlib.spec_for_shape(axes, self._rules, arr.shape, self._mesh)
+        return jax.device_put(arr, NamedSharding(self._mesh, spec))
+
+    def _place_inputs(self, spikes, valid_steps):
+        """Put the request batch on the data axis (no-op unsharded)."""
+        if self._mesh is None:
+            return spikes, valid_steps
+        spikes = self._place(spikes, ("steps", "batch", None))
+        if valid_steps is not None:
+            valid_steps = self._place(valid_steps, ("batch",))
+        return spikes, valid_steps
+
+    # -- launch paths --------------------------------------------------------
+    def _check_shapes(self, spikes, valid_steps):
         if spikes.ndim != 3 or spikes.shape[2] != self.n_input:
             raise ValueError(
                 f"spikes must be (T, B, {self.n_input}); got {spikes.shape}"
@@ -227,11 +416,73 @@ class NetworkExecutable:
                     f"valid_steps must be ({spikes.shape[1]},); "
                     f"got {valid_steps.shape}"
                 )
-        fn = self._fns.get(interpret)
+        return valid_steps
+
+    def _get_fn(self, path: str, interpret, forms: Tuple[str, ...]):
+        key = (path, interpret, forms)
+        fn = self._fns.get(key)
         if fn is None:
-            fn = jax.jit(partial(_scan_network, self.metas, interpret))
-            self._fns[interpret] = fn
-        return fn(self.params, jnp.asarray(spikes, jnp.float32), valid_steps)
+            scan = _batched_scan if path == "vmap" else _scan_network
+            fn = jax.jit(partial(scan, self.metas, forms, interpret))
+            self._fns[key] = fn
+        return fn
+
+    def run_device(
+        self,
+        spikes: np.ndarray,        # (T, B, n_input) 0/1
+        *,
+        valid_steps: np.ndarray | None = None,   # (B,) true steps per request
+        interpret: bool | None = None,
+        serial_form: str = "auto",
+    ) -> Tuple[jnp.ndarray, ...]:
+        """Per-layer spike trains as device arrays — no host sync.
+
+        Callers that time this must ``jax.block_until_ready`` the result.
+        With ``valid_steps``, batch slot ``b`` is masked after its first
+        ``valid_steps[b]`` timesteps: the live prefix is bit-identical to an
+        unmasked run and every padded timestep emits exact zeros, so padded
+        micro-batches are provably inert per request.  ``serial_form``
+        forces the serial kernel form ("auto" lets the cost model pick per
+        layer); the form never changes outputs, only throughput.
+        """
+        if not self.metas:
+            return ()
+        valid_steps = self._check_shapes(spikes, valid_steps)
+        forms = self.serial_forms(spikes.shape[1], serial_form)
+        self._record_forms("fused", spikes.shape[1], forms)
+        fn = self._get_fn("fused", interpret, forms)
+        spikes, valid_steps = self._place_inputs(
+            jnp.asarray(spikes, jnp.float32), valid_steps
+        )
+        return fn(self._params_for(forms), spikes, valid_steps)
+
+    def run_batched(
+        self,
+        spikes: np.ndarray,        # (T, B, n_input) 0/1 — B = request axis
+        *,
+        valid_steps: np.ndarray | None = None,   # (B,) true steps per request
+        interpret: bool | None = None,
+        serial_form: str = "auto",
+    ) -> Tuple[jnp.ndarray, ...]:
+        """The explicit batched path: ``jax.vmap`` over the request axis.
+
+        Same layout and same bits as :meth:`run_device` — each request
+        runs as an independent width-1 scan lane, so per-request masking
+        and the solo-equivalence guarantee carry over verbatim.  Serving
+        uses this path for full micro-batches; the differential harness
+        (``tests/test_batch_equivalence.py``) pins it against the fused
+        and layerwise paths.
+        """
+        if not self.metas:
+            return ()
+        valid_steps = self._check_shapes(spikes, valid_steps)
+        forms = self.serial_forms(spikes.shape[1], serial_form)
+        self._record_forms("vmap", spikes.shape[1], forms)
+        fn = self._get_fn("vmap", interpret, forms)
+        spikes, valid_steps = self._place_inputs(
+            jnp.asarray(spikes, jnp.float32), valid_steps
+        )
+        return fn(self._params_for(forms), spikes, valid_steps)
 
     def run(
         self,
@@ -239,10 +490,14 @@ class NetworkExecutable:
         *,
         valid_steps: np.ndarray | None = None,
         interpret: bool | None = None,
+        serial_form: str = "auto",
+        batched: bool = False,
     ) -> List[np.ndarray]:
         """Returns the per-layer spike trains [(T, B, n_l) ...]."""
-        outs = self.run_device(
-            spikes, valid_steps=valid_steps, interpret=interpret
+        launch = self.run_batched if batched else self.run_device
+        outs = launch(
+            spikes, valid_steps=valid_steps, interpret=interpret,
+            serial_form=serial_form,
         )
         # single host sync, after the whole network finished on device
         return [np.asarray(z) for z in outs]

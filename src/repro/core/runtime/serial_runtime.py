@@ -13,6 +13,18 @@ a data-parallel masked gather + segment-sum: per synaptic row r,
 The scatter is a single flat ``segment_sum`` over all ``B * R`` (batch, row)
 pairs with batch-offset segment ids; the neural update runs through the
 fused Pallas LIF kernel (:func:`repro.kernels.lif_update`).
+
+Two kernel *forms* implement that step:
+
+* :func:`serial_step` — the event form above; work ``O(B * R)`` but the
+  scatter's locality degrades super-linearly in batch.
+* :func:`serial_step_dense` — the dense fallback: the row arrays folded
+  into a ``(d_slots, S, T)`` tensor so the whole update is one einsum plus
+  a ring roll.  More MACs, each far cheaper, batch-scaling like the
+  parallel paradigm.  All weights are int8-magnitude integers, so both
+  forms accumulate exactly in float32 and their spike trains are
+  **bit-identical** — which form runs is purely a throughput decision
+  (:class:`repro.core.cost_model.SerialBatchCostModel`).
 """
 from __future__ import annotations
 
@@ -107,6 +119,63 @@ def serial_step(
         contrib.reshape(-1), seg_flat, num_segments=batch * d_slots * n_target
     )                                            # (B*slots*T,)
     ring = state.ring + updates.reshape(-1, d_slots, n_target).transpose(1, 0, 2)
+    i_t = ring[t % d_slots]
+    ring = ring.at[t % d_slots].set(0.0)
+    # fused Pallas LIF update operates (neurons, batch)
+    v_new, z_new = lif_update(
+        i_t.T, state.v.T, state.z.T, alpha=alpha, v_th=v_th, interpret=interpret
+    )
+    return LIFState(v=v_new.T, z=z_new.T, ring=ring), z_new.T
+
+
+def dense_serial_weights(exe: SerialExecutable) -> np.ndarray:
+    """Fold the flat row arrays into a ``(d_slots, S, T)`` dense tensor.
+
+    Slot ``d`` holds the delay-``d`` weights (slot 0 is all zero — delays
+    are >= 1), so ``x_t @ W[d]`` is exactly the sum the event form
+    scatters for delay ``d``.
+    """
+    d_slots = exe.delay_range + 1
+    w = np.zeros((d_slots, exe.n_source, exe.n_target), np.float32)
+    np.add.at(
+        w,
+        (
+            np.asarray(exe.row_delay),
+            np.asarray(exe.row_src),
+            np.asarray(exe.row_tgt),
+        ),
+        np.asarray(exe.row_weight),
+    )
+    return w
+
+
+@partial(
+    jax.jit,
+    static_argnames=("delay_range", "n_target", "alpha", "v_th", "interpret"),
+)
+def serial_step_dense(
+    w_dense,             # (d_slots, S, T) f32 per-delay-slot weights
+    state: LIFState,
+    x_t: jnp.ndarray,    # (B, S)
+    t: jnp.ndarray,
+    *,
+    delay_range: int,
+    n_target: int,
+    alpha: float,
+    v_th: float,
+    interpret: bool | None = None,
+):
+    """Dense-fallback serial step — same carry, same outputs, all matmul.
+
+    ``upd[d] = x_t @ W[d]`` is the total delay-``d`` contribution; rolling
+    by ``t`` lands it in ring slot ``(t + d) % d_slots``, exactly where the
+    event form's segment ids point.  Delay-0 weights are structurally zero,
+    so the current slot is read before anything lands in it — the same
+    delays >= 1 ordering the event form relies on.
+    """
+    d_slots = delay_range + 1
+    upd = jnp.einsum("bs,dst->dbt", x_t, w_dense)    # (d_slots, B, T)
+    ring = state.ring + jnp.roll(upd, t, axis=0)
     i_t = ring[t % d_slots]
     ring = ring.at[t % d_slots].set(0.0)
     # fused Pallas LIF update operates (neurons, batch)

@@ -1,4 +1,7 @@
-from .sharding import constrain, make_rules, sharding_ctx, spec_for, spec_for_shape, tree_shardings
+from .sharding import (
+    constrain, make_rules, sharding_ctx, snn_mesh, snn_rules, spec_for,
+    spec_for_shape, tree_shardings,
+)
 from .fault_tolerance import (
     FaultTolerantDriver, HeartbeatRegistry, HostFailure, RestartPolicy,
     StragglerDetector, plan_elastic_mesh,

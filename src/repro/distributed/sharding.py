@@ -48,6 +48,86 @@ def make_rules(*, fsdp: bool = False, multi_pod: bool = False,
     }
 
 
+def compat_shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                     axis_names=None):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=, axis_names=)``;
+    older releases only have ``jax.experimental.shard_map.shard_map``
+    with ``check_rep=`` and an ``auto=`` set (the complement of the
+    manual ``axis_names``).  Callers write the new-API kwargs; this shim
+    translates when the old API is what's installed.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {"check_rep": check_vma}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )
+
+
+def snn_rules() -> dict:
+    """Logical-axis rules for the SNN runtime's fused executor.
+
+    The SNN runtime names its dimensions after the paper's structures and
+    maps them onto the standard 2-axis ``("data", "model")`` mesh:
+
+        batch   -> "data"     # DP over requests (the micro-batch axis)
+        neurons -> "model"    # TP of a layer's target population (the
+                              # WDM's n_target rows — "subordinate PEs")
+        rows    -> "model"    # serial synaptic rows split like the paper
+                              # splits dense matrices across adjacent PEs
+        steps   -> None       # the scan axis is never sharded
+        cols    -> None       # WDM stacked-input columns stay whole so the
+                              # ring gather needs no collective
+
+    :func:`spec_for_shape` degrades any rule that does not divide a given
+    tensor to replication, and :func:`snn_mesh` returns ``None`` on a
+    single device — the identity fallback that keeps CPU CI running the
+    exact same code path unsharded.
+    """
+    return {
+        "batch": ("data",),
+        "neurons": ("model",),
+        "rows": ("model",),
+        "steps": (),
+        "cols": (),
+        None: (),
+    }
+
+
+def snn_mesh(devices=None, *, model_axis: int = 1) -> Optional[Mesh]:
+    """A ``("data", "model")`` mesh over the available devices.
+
+    Returns ``None`` when only one device is visible — the caller treats
+    that as the identity fallback (no placement, no constraints), so the
+    sharded code path is exercised end-to-end on CPU CI without ever
+    touching a collective.  ``model_axis`` carves that many devices out
+    for tensor parallelism of large layers; the rest do data parallelism
+    over the request batch.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) <= 1:
+        return None
+    if model_axis < 1 or len(devices) % model_axis != 0:
+        raise ValueError(
+            f"model_axis {model_axis} must divide device count {len(devices)}"
+        )
+    import numpy as np
+
+    grid = np.array(devices).reshape(len(devices) // model_axis, model_axis)
+    return Mesh(grid, ("data", "model"))
+
+
 def spec_for(axes, rules) -> P:
     """axes: tuple of logical names (or None) per dim -> PartitionSpec."""
     parts = []
@@ -85,12 +165,16 @@ def spec_for_shape(axes, rules, shape, mesh: Mesh) -> P:
     parts = []
     used = set()  # a mesh axis may appear at most once per spec
     for dim, a in zip(shape, axes):
-        fit = _fit_axes(rules.get(a, ()), int(dim), mesh)
+        rule = tuple(m for m in rules.get(a, ()) if m is not None)
+        fit = _fit_axes(rule, int(dim), mesh)
         fit = tuple(m for m in fit if m not in used)
         used.update(fit)
         if len(fit) == 0:
             parts.append(None)
-        elif len(fit) == 1:
+        elif len(rule) == 1:
+            # single-axis rules read as bare names ("data"); multi-axis
+            # rules keep tuple form even when only a prefix fits, so a
+            # degraded ("pod", "data") -> ("pod",) stays visibly a prefix
             parts.append(fit[0])
         else:
             parts.append(fit)

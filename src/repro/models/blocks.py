@@ -338,7 +338,8 @@ def moe_forward_local(p: dict, x: jnp.ndarray, cfg: ModelConfig):
         y = jax.lax.psum(y, model_axes[0])   # assemble across expert shards
         return y.reshape(bl, sl, d)
 
-    return jax.shard_map(
+    from ..distributed.sharding import compat_shard_map
+    return compat_shard_map(
         local_block, mesh=mesh,
         in_specs=(x_spec, P_(None, None), ew_spec, ew_spec, ewd_spec),
         out_specs=x_spec,

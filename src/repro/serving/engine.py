@@ -96,6 +96,7 @@ class ServingEngine:
         max_retained_results: int = 4096,
         max_models: Optional[int] = None,
         interpret: bool | None = None,
+        full_bucket_path: str = "batched",
     ):
         self.queue = RequestQueue(max_pending=max_pending)
         self.scheduler = ShapeBucketingScheduler(
@@ -103,7 +104,10 @@ class ServingEngine:
             micro_batch=micro_batch,
             min_bucket_steps=min_bucket_steps,
         )
-        self.pool = ExecutablePool(interpret=interpret, max_models=max_models)
+        self.pool = ExecutablePool(
+            interpret=interpret, max_models=max_models,
+            full_bucket_path=full_bucket_path,
+        )
         self.pool.register(net, report)
         self.metrics = ServingMetrics()
         #: Sync-path replies, oldest evicted beyond ``max_retained_results``
@@ -286,6 +290,9 @@ class ServingEngine:
 
     def _run_microbatch(self, mb: MicroBatch) -> Dict[int, RequestResult]:
         t_dispatch = time.perf_counter()
+        # the pool routes by occupancy: full buckets take its configured
+        # full_bucket_path (vmapped request-axis by default), partial
+        # buckets the fused in-scan path
         outs = self.pool.run_microbatch(mb, block=True)
         t_complete = time.perf_counter()
         host_outs = [np.asarray(z) for z in outs]

@@ -3,11 +3,14 @@
 The pool owns the mapping from a *registered model* (a ``net`` +
 ``report`` pair under a name) to its fused
 :class:`~repro.core.runtime.NetworkExecutable` and tracks which
-``(model, bucket-shape)`` pairs have already been traced and compiled.
-Steady-state traffic therefore never re-lowers a layer program and never
-re-traces a scan: a bucket *hit* reuses the cached jit entry, a *miss*
-pays one compile and warms the shape for every later request.  Hit/miss
-counters are kept both globally and split per model.
+``(model, bucket-shape, launch-path)`` triples have already been traced
+and compiled — the fused in-scan path serves partial buckets and the
+vmapped request-axis path (``run_batched``) serves full buckets, and the
+two trace separately.  Steady-state traffic therefore never re-lowers a
+layer program and never re-traces a scan: a bucket *hit* reuses the
+cached jit entry, a *miss* pays one compile and warms the shape for
+every later request.  Hit/miss counters are kept both globally and split
+per model.
 
 Multi-tenancy is bounded by an **LRU cap** (``max_models``): when more
 models are registered than the cap allows, the least-recently-used
@@ -54,11 +57,17 @@ class PoolEntry:
     name: str
     net: SNNNetwork
     report: CompileReport
-    warm_shapes: Set[Tuple[int, int, int]] = dataclasses.field(
+    #: Warmed jit entries, keyed ``(bucket-shape, path)`` with path
+    #: "fused" (in-scan batching, partial buckets) or "batched" (the
+    #: vmapped request-axis path, full buckets) — the two launch paths
+    #: trace separately, so warmth is tracked per path.
+    warm_shapes: Set[Tuple[Tuple[int, int, int], str]] = dataclasses.field(
         default_factory=set
     )
     bucket_hits: int = 0
     bucket_misses: int = 0
+    batched_launches: int = 0
+    fused_launches: int = 0
     #: The NetworkExecutable instance the warm set was built against; a
     #: rebuild (network mutation or post-eviction revival) starts a fresh
     #: jit cache, so the warm set must reset with it or "hits" would hide
@@ -92,11 +101,23 @@ class ExecutablePool:
         *,
         interpret: bool | None = None,
         max_models: Optional[int] = None,
+        full_bucket_path: str = "batched",
     ):
         if max_models is not None and max_models < 1:
             raise ValueError("max_models must be >= 1 or None")
+        if full_bucket_path not in ("batched", "fused"):
+            raise ValueError(
+                f"full_bucket_path must be 'batched' or 'fused'; "
+                f"got {full_bucket_path!r}"
+            )
         self.interpret = interpret
         self.max_models = max_models
+        #: Launch path for FULL micro-batches (partial buckets always take
+        #: the fused path — their empty slots cost one masked lane there).
+        #: "batched" (default) is the vmapped request-axis path; hosts
+        #: where vmap-of-scan lowers poorly can pin "fused".  The paths
+        #: are bit-identical either way.
+        self.full_bucket_path = full_bucket_path
         #: LRU order: least-recently-used first.
         self._entries: "OrderedDict[str, PoolEntry]" = OrderedDict()
         self.evictions = 0
@@ -172,26 +193,58 @@ class ExecutablePool:
     ) -> int:
         """Trace + compile the given bucket shapes with dummy traffic.
 
-        Returns the number of shapes newly warmed.  After warmup those
-        buckets are all hits and :meth:`relowerings` stays at zero.
+        Warms every launch path the routing policy can produce for each
+        shape — the fused in-scan path always (partial buckets), the
+        vmapped request-axis path only when ``full_bucket_path`` routes
+        full buckets there — so steady-state traffic hits whichever path
+        the scheduler's occupancy produces, and a ``"fused"``-pinned
+        pool never compiles vmapped entries it cannot launch.  Returns
+        the number of shapes newly warmed.  After warmup those buckets
+        are all hits and :meth:`relowerings` stays at zero.
         """
         entry = self.entry(name)
         exe = entry.executable          # refreshes the warm set if rebuilt
+        paths = [("fused", exe.run_device)]
+        if self.full_bucket_path == "batched":
+            paths.append(("batched", exe.run_batched))
         warmed = 0
         for key in buckets:
-            if key.shape in entry.warm_shapes:
-                continue
+            fresh = False
             dummy = np.zeros(key.shape, np.float32)
             valid = np.zeros(key.batch, np.int32)
-            jax.block_until_ready(
-                exe.run_device(
-                    dummy, valid_steps=valid, interpret=self.interpret
+            for path, launch in paths:
+                if (key.shape, path) in entry.warm_shapes:
+                    continue
+                jax.block_until_ready(
+                    launch(dummy, valid_steps=valid, interpret=self.interpret)
                 )
-            )
-            entry.warm_shapes.add(key.shape)
-            warmed += 1
+                entry.warm_shapes.add((key.shape, path))
+                fresh = True
+            warmed += fresh
         self._lower_mark = lowering_total()
         return warmed
+
+    def _acquire(
+        self, name: str, shape: Tuple[int, int, int], path: str
+    ) -> Tuple[PoolEntry, NetworkExecutable]:
+        """Touch the model, revive it if evicted, count ONE hit or miss.
+
+        This is the pool's single counting point: a cold revival inside
+        :meth:`entry` re-lowers the model's programs *within this same
+        acquire*, and the resulting cleared warm set must surface as
+        exactly one miss for the launch that triggered it — counting in
+        both the revival path and the launch path would double-book the
+        same compile stall (regression-tested in
+        ``tests/test_executable_cache.py``).
+        """
+        entry = self.entry(name)        # may revive cold (clears warm set)
+        exe = entry.executable          # refreshes the warm set if rebuilt
+        if (shape, path) in entry.warm_shapes:
+            entry.bucket_hits += 1
+        else:
+            entry.bucket_misses += 1
+            entry.warm_shapes.add((shape, path))
+        return entry, exe
 
     def run_microbatch(
         self,
@@ -199,21 +252,37 @@ class ExecutablePool:
         name: Optional[str] = None,
         *,
         block: bool = True,
+        path: Optional[str] = None,
     ):
         """Run one padded micro-batch; returns per-layer device arrays.
 
         Routes to ``micro_batch.model`` unless ``name`` overrides it.
-        With ``block`` (default) the call returns only after the device
-        finishes, so wall-clock around it measures real execution time.
+        ``path`` overrides the pool's routing policy — default: **full**
+        buckets (every slot live) take ``full_bucket_path`` (the vmapped
+        ``run_batched`` request-axis path unless configured otherwise),
+        partial buckets the fused ``run_device`` path.  Replies are
+        bit-identical either way.  With ``block`` (default) the call
+        returns only after the device finishes, so wall-clock around it
+        measures real execution time.
         """
-        entry = self.entry(name if name is not None else micro_batch.model)
-        exe = entry.executable          # refreshes the warm set if rebuilt
-        if micro_batch.key.shape in entry.warm_shapes:
-            entry.bucket_hits += 1
+        if path is None:
+            path = (
+                self.full_bucket_path
+                if len(micro_batch.requests) == micro_batch.key.batch
+                else "fused"
+            )
+        if path not in ("fused", "batched"):
+            raise ValueError(f"unknown launch path {path!r}")
+        entry, exe = self._acquire(
+            name if name is not None else micro_batch.model,
+            micro_batch.key.shape, path,
+        )
+        launch = exe.run_batched if path == "batched" else exe.run_device
+        if path == "batched":
+            entry.batched_launches += 1
         else:
-            entry.bucket_misses += 1
-            entry.warm_shapes.add(micro_batch.key.shape)
-        outs = exe.run_device(
+            entry.fused_launches += 1
+        outs = launch(
             micro_batch.spikes,
             valid_steps=micro_batch.valid_steps,
             interpret=self.interpret,
@@ -242,7 +311,9 @@ class ExecutablePool:
             name: {
                 "bucket_hits": e.bucket_hits,
                 "bucket_misses": e.bucket_misses,
-                "warm_shapes": len(e.warm_shapes),
+                "batched_launches": e.batched_launches,
+                "fused_launches": e.fused_launches,
+                "warm_shapes": len({s for s, _ in e.warm_shapes}),
                 "resident": e.report.executable is not None,
                 "jit_entries": (
                     e.report.executable.jit_entries()

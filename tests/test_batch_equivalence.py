@@ -1,0 +1,265 @@
+"""Differential equivalence harness across every batch execution path.
+
+The paper's premise is that the serial (event-driven) and parallel
+(dense) paradigms are numerically interchangeable per layer; this repo
+multiplies the ways a network can *launch* — and every one of them must
+produce the same spike trains:
+
+* **solo**      — each request alone through the fused scan (batch 1),
+                  the serving-layer ground truth;
+* **fused**     — the in-scan batched path (``run_device``) with
+                  ``valid_steps`` masking;
+* **vmap**      — the explicit batched path (``run_batched``):
+                  ``jax.vmap`` over the request axis;
+* **dense**     — the fused path with every serial layer forced onto the
+                  dense-fallback matmul kernel;
+* **sharded**   — the fused path after ``shard()`` routed the operands
+                  through ``distributed/sharding.py`` (identity fallback
+                  on single-device CI).
+
+All weights are int8-magnitude integers, so every accumulation is exact
+in float32 — the harness asserts **bit-identical** outputs, not just
+atol-bounded ones.  The layerwise per-paradigm runner is the independent
+reference (it shares no scan code with the fused executor).
+"""
+import numpy as np
+import pytest
+
+from repro.core import SwitchingCompiler, random_layer
+from repro.core.cost_model import SerialBatchCostModel
+from repro.core.layer import LIFParams, SNNNetwork
+from repro.core.runtime import network_executable, run_network_layerwise
+from repro.core.switching import CompileReport
+from repro.distributed.sharding import snn_mesh, snn_rules
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+#: Paradigm mixes under test — pure nets, both interleavings, and a
+#: serial-heavy stack (the dense fallback must hold mid-cascade).  Seeds
+#: are fixed literals: a failing geometry must reproduce run-to-run
+#: (str hashes are salted per process, so hash(name) would not).
+MIXES = {
+    "serial-only": (["serial", "serial"], 101),
+    "parallel-only": (["parallel", "parallel"], 202),
+    "serial-first": (["serial", "parallel", "serial"], 303),
+    "parallel-first": (["parallel", "serial", "parallel"], 404),
+    "serial-heavy": (["serial", "serial", "parallel"], 505),
+}
+
+PATHS = ["fused", "vmap", "dense", "sharded"]
+
+_CACHE = {}
+
+
+def _net_for(mix_name):
+    """One compiled net + fused executable per mix, shared across paths."""
+    if mix_name in _CACHE:
+        return _CACHE[mix_name]
+    paradigms, seed = MIXES[mix_name]
+    rng = np.random.default_rng(seed)
+    sizes = [int(rng.integers(12, 28)) for _ in range(len(paradigms) + 1)]
+    layers = []
+    for i in range(len(paradigms)):
+        l = random_layer(
+            sizes[i], sizes[i + 1],
+            density=float(rng.uniform(0.2, 0.8)),
+            delay_range=int(rng.integers(1, 7)),
+            seed=int(rng.integers(0, 2**31)),
+            delay_granularity=rng.choice(["source", "synapse"]),
+        )
+        l.lif = LIF
+        layers.append(l)
+    net = SNNNetwork(layers=layers)
+    report = CompileReport(layers=[
+        SwitchingCompiler(p).compile_layer(l)
+        for p, l in zip(paradigms, net.layers)
+    ])
+    exe = network_executable(net, report)
+    batch = 4
+    spikes = (rng.random((12, batch, sizes[0])) < 0.3).astype(np.float32)
+    valid = np.asarray(
+        [12, int(rng.integers(1, 12)), int(rng.integers(1, 12)), 0],
+        np.int32,
+    )
+    want = _solo_reference(net, report, spikes, valid)
+    _CACHE[mix_name] = (net, report, exe, spikes, valid, want)
+    return _CACHE[mix_name]
+
+
+def _solo_reference(net, report, spikes, valid):
+    """Each live request alone, trimmed to its true length, through the
+    independent layerwise per-paradigm runner — the harness ground truth
+    (shares no scan code with the fused executor)."""
+    outs = [
+        np.zeros(spikes.shape[:2] + (l.n_target,), np.float32)
+        for l in net.layers
+    ]
+    for b in range(spikes.shape[1]):
+        n = int(valid[b])
+        if n == 0:
+            continue
+        solo = run_network_layerwise(net, report, spikes[:n, b : b + 1])
+        for dst, z in zip(outs, solo):
+            dst[:n, b] = z[:, 0]
+    return outs
+
+
+def _launch(exe, path, spikes, valid):
+    if path == "fused":
+        return exe.run(spikes, valid_steps=valid)
+    if path == "vmap":
+        return exe.run(spikes, valid_steps=valid, batched=True)
+    if path == "dense":
+        return exe.run(spikes, valid_steps=valid, serial_form="dense")
+    if path == "sharded":
+        exe.shard()                       # identity fallback on 1 device
+        return exe.run(spikes, valid_steps=valid)
+    if path == "solo":
+        return [
+            np.concatenate(
+                [exe.run(spikes[:, b : b + 1])[i] for b in range(
+                    spikes.shape[1]
+                )],
+                axis=1,
+            )
+            for i in range(len(exe.metas))
+        ]
+    raise AssertionError(path)
+
+
+@pytest.mark.parametrize("path", PATHS)
+@pytest.mark.parametrize("mix", sorted(MIXES))
+def test_batch_path_equals_layerwise_reference(mix, path):
+    """Every (paradigm mix x batch path) is bit-identical to the per-request
+    layerwise reference, masked slots included."""
+    net, report, exe, spikes, valid, want = _net_for(mix)
+    got = _launch(exe, path, spikes, valid)
+    assert len(got) == len(net.layers)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("mix", sorted(MIXES))
+def test_unmasked_full_batch_equals_layerwise_reference(mix):
+    """Unmasked full-batch runs (incl. the solo loop) match the layerwise
+    runner on the full train."""
+    net, report, exe, spikes, _, _ = _net_for(mix)
+    base = run_network_layerwise(net, report, spikes)
+    for path in ("fused", "vmap", "dense", "solo"):
+        got = _launch(exe, path, spikes, None)
+        for a, b in zip(got, base):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_crossover_is_recorded_and_inert():
+    """The cost model's form switch is visible in the report, invisible in
+    the outputs: a batch on each side of the crossover runs a different
+    serial kernel but produces identical spike trains."""
+    # sparse + long delays: (D+1)/density is large, so the crossover sits
+    # well above batch 1 and the sweep below straddles it
+    layer = random_layer(30, 24, density=0.08, delay_range=4, seed=7)
+    layer.lif = LIF
+    net = SNNNetwork(layers=[layer])
+    report = CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(layer)]
+    )
+    exe = network_executable(net, report)
+    meta = exe.metas[0]
+    crossover = exe.cost_model.crossover_batch(
+        meta.n_rows, meta.n_source, meta.n_target, meta.delay_range
+    )
+    assert crossover > 1.0, "test net must not be dense-from-batch-1"
+    rng = np.random.default_rng(7)
+    batches = (1, max(2, int(np.ceil(crossover)) + 1))
+    seen = []
+    for batch in batches:
+        sp = (rng.random((10, batch, 30)) < 0.3).astype(np.float32)
+        auto = exe.run(sp)
+        # the record reflects the launch that just ran: capture the auto
+        # pick before the forced runs overwrite the same (path, batch) key
+        forms = report.serial_forms[("fused", batch)]
+        want = "dense" if batch >= crossover else "event"
+        assert forms == (want,), (batch, crossover, forms)
+        seen.append(want)
+        event = exe.run(sp, serial_form="event")
+        assert report.serial_forms[("fused", batch)] == ("event",)
+        dense = exe.run(sp, serial_form="dense")
+        assert report.serial_forms[("fused", batch)] == ("dense",)
+        for a, b, c in zip(auto, event, dense):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, c)
+    assert seen == ["event", "dense"]     # both sides actually exercised
+
+
+def test_vmap_path_records_forms_separately():
+    net, report, exe, spikes, valid, _ = _net_for("serial-first")
+    exe.run(spikes, valid_steps=valid, batched=True)
+    assert ("vmap", spikes.shape[1]) in report.serial_forms
+    forms = report.serial_forms[("vmap", spikes.shape[1])]
+    assert len(forms) == len(net.layers)
+    assert all(
+        (f == "-") == (m.paradigm == "parallel")
+        for f, m in zip(forms, exe.metas)
+    )
+
+
+def test_forced_form_never_recorded_as_auto_choice():
+    """Forcing a kernel form records that form, not the cost model's pick."""
+    net, report, exe, spikes, _, _ = _net_for("serial-heavy")
+    exe.run(spikes, serial_form="event")
+    forms = report.serial_forms[("fused", spikes.shape[1])]
+    assert all(f in ("event", "-") for f in forms)
+    with pytest.raises(ValueError):
+        exe.run(spikes, serial_form="bogus")
+
+
+def test_dense_fallback_empty_layer_regression():
+    """A serial layer with zero synaptic rows survives every path."""
+    layer = random_layer(10, 8, density=0.4, delay_range=2, seed=0)
+    layer.weights[:] = 0.0               # no synapses -> no rows
+    layer.lif = LIF
+    net = SNNNetwork(layers=[layer])
+    report = CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(layer)]
+    )
+    exe = network_executable(net, report)
+    assert exe.metas[0].n_rows == 0
+    assert exe.cost_model.crossover_batch(0, 10, 8, 2) == float("inf")
+    spikes = np.ones((5, 3, 10), np.float32)
+    for path in PATHS:
+        outs = _launch(exe, path, spikes, None)
+        assert outs[0].shape == (5, 3, 8)
+        assert outs[0].sum() == 0
+
+
+def test_sharded_identity_fallback_on_single_device():
+    """snn_mesh() is None on one device and shard() is then the identity:
+    same params, and the rules table still resolves every logical axis."""
+    import jax
+
+    if jax.device_count() == 1:
+        assert snn_mesh() is None
+    rules = snn_rules()
+    for axis in ("batch", "neurons", "rows", "steps", "cols", None):
+        assert axis in rules
+    net, report, exe, spikes, valid, _ = _net_for("parallel-first")
+    before = [tuple(map(id, p)) for p in exe.params]
+    exe.shard(mesh=None)
+    assert exe.mesh is None or jax.device_count() > 1
+    if exe.mesh is None:
+        assert [tuple(map(id, p)) for p in exe.params] == before
+
+
+def test_cost_model_crossover_monotonicity():
+    """Denser layers cross to the dense form at smaller batches."""
+    cm = SerialBatchCostModel()
+    sparse = cm.crossover_batch(100, 100, 100, 8)      # density 0.001/slot
+    dense_ = cm.crossover_batch(8000, 100, 100, 8)
+    assert dense_ <= sparse
+    # and the decision is consistent with the crossover
+    for rows in (100, 8000):
+        x = cm.crossover_batch(rows, 100, 100, 8)
+        if x != float("inf"):
+            assert cm.prefer_dense(rows, 100, 100, 8, int(np.ceil(x)) + 1)
+        if x >= 2:
+            assert not cm.prefer_dense(rows, 100, 100, 8, int(x // 2))

@@ -140,8 +140,10 @@ class TestOptim:
         def f(g):
             return psum_compressed(g, "data")
 
+        from repro.distributed.sharding import compat_shard_map
+
         out = jax.jit(
-            jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P())
+            compat_shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P())
         )(g)
         np.testing.assert_allclose(
             np.asarray(out["w"]), np.asarray(g["w"]), atol=np.abs(g["w"]).max() / 100

@@ -87,3 +87,120 @@ def test_repeated_builds_are_lowering_free():
         exe = network_executable(net, report)
         assert isinstance(exe, NetworkExecutable)
     assert lowering_total() == mark
+
+
+# -- pool hit/miss accounting across cold revival ----------------------------
+
+def _microbatch(scheduler, queue, steps, n_in, model, count=1):
+    reqs = [
+        queue.submit(np.ones((steps, n_in), np.float32), model=model)
+        for _ in range(count)
+    ]
+    for r in reqs:
+        scheduler.admit(r)
+    return scheduler.pop_launchable()
+
+
+def test_cold_revival_counts_exactly_one_miss():
+    """A cold revival re-lowers inside the same ``run_microbatch`` acquire.
+
+    The launch that triggered the revival must book exactly ONE bucket
+    miss — counting a miss for the revival *and* another for the cleared
+    warm set would double-book the same compile stall and poison the
+    hit-rate invariants the benchmarks assert on.
+    """
+    from repro.serving import ExecutablePool
+    from repro.serving.queue import RequestQueue
+    from repro.serving.scheduler import ShapeBucketingScheduler
+
+    net_a, rep_a = build([10, 8], ["serial"])
+    net_b, rep_b = build([12, 6], ["parallel"], seed=5)
+    pool = ExecutablePool(max_models=1)
+    pool.register(net_a, rep_a, "a")
+    pool.register(net_b, rep_b, "b")            # evicts a (LRU)
+    assert rep_a.executable is None
+
+    q = RequestQueue()
+    sched = ShapeBucketingScheduler(10, micro_batch=2, min_bucket_steps=4)
+    sched.set_model_input("a", 10)
+
+    # partial bucket -> fused path; the acquire revives "a" cold
+    mb = _microbatch(sched, q, steps=3, n_in=10, model="a")
+    pool.run_microbatch(mb)
+    counters = pool.counters_by_model()["a"]
+    assert pool.revivals == 1
+    assert pool.relowerings() > 0                # revival cost is visible
+    assert (counters["bucket_misses"], counters["bucket_hits"]) == (1, 0)
+
+    # same shape again: pure hit, no second revival
+    mb = _microbatch(sched, q, steps=3, n_in=10, model="a")
+    pool.run_microbatch(mb)
+    counters = pool.counters_by_model()["a"]
+    assert (counters["bucket_misses"], counters["bucket_hits"]) == (1, 1)
+    assert pool.revivals == 1
+
+    # full bucket -> the vmapped batched path traces separately: its cold
+    # revival (b was evicted by a's revival) also books exactly one miss
+    sched.set_model_input("b", 12)
+    mb = _microbatch(sched, q, steps=3, n_in=12, model="b", count=2)
+    assert len(mb.requests) == mb.key.batch      # full -> batched path
+    pool.run_microbatch(mb)
+    counters = pool.counters_by_model()["b"]
+    assert pool.revivals == 2
+    assert (counters["bucket_misses"], counters["bucket_hits"]) == (1, 0)
+    assert counters["batched_launches"] == 1
+
+
+def test_fused_and_batched_paths_warm_independently():
+    """One bucket shape, two launch paths: each pays its own single miss,
+    then both stay hits — path-keyed warm entries never alias."""
+    from repro.serving import ExecutablePool
+    from repro.serving.queue import RequestQueue
+    from repro.serving.scheduler import ShapeBucketingScheduler
+
+    net, report = build([10, 8], ["serial"])
+    pool = ExecutablePool()
+    pool.register(net, report, "m")
+    q = RequestQueue()
+    sched = ShapeBucketingScheduler(10, micro_batch=2, min_bucket_steps=4)
+    sched.set_model_input("m", 10)
+
+    seq = [1, 2, 1, 2]                           # partial, full, partial, full
+    for count in seq:
+        mb = _microbatch(sched, q, steps=3, n_in=10, model="m", count=count)
+        pool.run_microbatch(mb)
+    counters = pool.counters_by_model()["m"]
+    assert counters["bucket_misses"] == 2        # one per path
+    assert counters["bucket_hits"] == 2
+    assert counters["fused_launches"] == 2
+    assert counters["batched_launches"] == 2
+    assert counters["warm_shapes"] == 1          # same device shape
+
+
+def test_full_bucket_path_pinned_fused():
+    """A ``full_bucket_path="fused"`` pool never touches the vmapped path:
+    warmup compiles only fused entries and full buckets launch fused —
+    warmed, so zero misses after warmup."""
+    from repro.serving import ExecutablePool
+    from repro.serving.queue import RequestQueue
+    from repro.serving.scheduler import BucketKey, ShapeBucketingScheduler
+
+    net, report = build([10, 8], ["serial"])
+    pool = ExecutablePool(full_bucket_path="fused")
+    pool.register(net, report, "m")
+    pool.warmup([BucketKey(steps=4, n_in=10, batch=2)], name="m")
+    entry = pool.counters_by_model()["m"]
+    assert entry["warm_shapes"] == 1
+    paths = {p for _, p in pool.entry("m").warm_shapes}
+    assert paths == {"fused"}                    # no unreachable vmap trace
+
+    q = RequestQueue()
+    sched = ShapeBucketingScheduler(10, micro_batch=2, min_bucket_steps=4)
+    sched.set_model_input("m", 10)
+    mb = _microbatch(sched, q, steps=3, n_in=10, model="m", count=2)
+    assert len(mb.requests) == mb.key.batch      # full bucket
+    pool.run_microbatch(mb)
+    counters = pool.counters_by_model()["m"]
+    assert counters["fused_launches"] == 1
+    assert counters["batched_launches"] == 0
+    assert (counters["bucket_misses"], counters["bucket_hits"]) == (0, 1)

@@ -245,6 +245,49 @@ def test_served_late_counts_as_deadline_miss_but_is_served():
     assert stats["deadline_miss_rate"] == 1.0       # served late
 
 
+def test_entire_backlog_expires_before_first_launch():
+    """Shed under load: EVERY queued request expires before the first
+    launch.  No scan may run for a fully-expired backlog, every caller
+    still gets a ShedReply, and the metrics' ``deadline_miss_rate`` must
+    stay consistent with the shed counters (all misses are sheds here —
+    no served-with-deadline requests exist to dilute the rate)."""
+    rng = np.random.default_rng(41)
+    net, report = mixed_net([12, 8], rng)
+    engine = ServingEngine(net, report, micro_batch=2, min_bucket_steps=4)
+    rids = [
+        engine.submit(spikes_for(rng, 4, 12), deadline_ms=1.0,
+                      priority=p)
+        for p in (0, 2, 1, 0, 2)
+    ]
+    time.sleep(0.01)                     # every deadline passes in-queue
+    served = engine.drain()
+    assert set(served) == set(rids)      # never a silent drop
+    for rid in rids:
+        reply = served[rid]
+        assert isinstance(reply, ShedReply) and not reply
+        assert reply.waited_ms >= 1.0
+        assert engine.results[rid] is reply
+    stats = engine.stats()
+    assert stats["shed"] == len(rids)
+    assert stats["requests"] == 0        # nothing was served...
+    assert stats["batches"] == 0         # ...and nothing launched
+    assert engine.pool.bucket_hits + engine.pool.bucket_misses == 0
+    # miss rate == shed / (shed + served-with-deadline) == 5 / (5 + 0)
+    assert stats["deadline_miss_rate"] == 1.0
+    # the identity the counters must satisfy:
+    n_deadline_served = sum(
+        r.deadline_ms is not None for r in engine.metrics.records
+    )
+    assert stats["deadline_miss_rate"] == stats["shed"] / (
+        stats["shed"] + n_deadline_served
+    )
+    # the engine is not wedged: a live request afterwards is served
+    rid = engine.submit(spikes_for(rng, 4, 12))
+    out = engine.step_continuous()
+    assert not isinstance(out[rid], ShedReply)
+    assert engine.stats()["requests"] == 1
+
+
 def test_latency_by_priority_classes():
     rng = np.random.default_rng(13)
     net, report = mixed_net([12, 8], rng)
