@@ -52,6 +52,7 @@ def main() -> None:
     bench_kernels.run()
     bench_network.run()
     bench_network.run_batch_sweep()
+    bench_network.run_donation()
     bench_serving.run()
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
 

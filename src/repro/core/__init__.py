@@ -5,10 +5,13 @@ from .hw import SpiNNaker2Config, TPUv5eConfig, DEFAULT_S2, DEFAULT_TPU
 from .layer import (
     LayerCharacter,
     LIFParams,
+    Population,
+    Projection,
     SNNLayer,
     SNNNetwork,
     feedforward_network,
     random_layer,
+    random_projection,
 )
 from .dataset import (
     LABEL_PARALLEL,
@@ -39,8 +42,9 @@ from .switching import (
 
 __all__ = [
     "SpiNNaker2Config", "TPUv5eConfig", "DEFAULT_S2", "DEFAULT_TPU",
-    "LayerCharacter", "LIFParams", "SNNLayer", "SNNNetwork",
-    "feedforward_network", "random_layer",
+    "LayerCharacter", "LIFParams", "Population", "Projection",
+    "SNNLayer", "SNNNetwork",
+    "feedforward_network", "random_layer", "random_projection",
     "LABEL_PARALLEL", "LABEL_SERIAL", "ParadigmDataset",
     "generate_dataset", "load_or_generate",
     "OptFlags", "ParallelProgram", "compile_parallel",

@@ -203,8 +203,78 @@ class SerialBatchCostModel:
         return max(1.0, ratio ** (1.0 / (self.batch_exponent - 1.0)))
 
 
+    # -- refitting from measured sweeps --------------------------------------
+    @classmethod
+    def fit_from_sweep(
+        cls,
+        points,                 # [{"batch": b, "event_us": e, "dense_us": d}]
+        *,
+        n_rows_total: int,
+        dense_macs_per_batch: int,
+    ) -> "SerialBatchCostModel":
+        """Refit the constants from a measured event/dense batch sweep.
+
+        ``points`` are per-batch wall-clock measurements of the two serial
+        kernel forms over the SAME network (``benchmarks/bench_network.py
+        run_batch_sweep`` produces them); ``n_rows_total`` is the summed
+        synaptic-row count of its serial layers and
+        ``dense_macs_per_batch`` the summed ``n_source * (delay_range+1) *
+        n_target`` dense MACs.  The fit keeps ``mac_coeff`` as the unit
+        and solves the other two in log space:
+
+        * ``batch_exponent`` — least-squares slope of ``log(event_us)``
+          on ``log(batch)`` (the event form's measured super-linearity).
+        * ``scatter_coeff`` — chosen so the model's event/dense cost
+          ratio matches the measured time ratio on average, i.e. the
+          predicted crossover batch tracks where the measured curves
+          actually cross on the current backend.
+        """
+        pts = [p for p in points if p["batch"] >= 1]
+        if len(pts) < 2:
+            raise ValueError("need at least two sweep points to fit")
+        if n_rows_total <= 0 or dense_macs_per_batch <= 0:
+            raise ValueError("row/MAC totals must be positive")
+        if any(p["event_us"] <= 0 or p["dense_us"] <= 0 for p in pts):
+            raise ValueError(
+                "sweep timings must be positive (corrupt or underflowed "
+                "batch_sweep point?)"
+            )
+        logb = [math.log(p["batch"]) for p in pts]
+        loge = [math.log(p["event_us"]) for p in pts]
+        bbar = sum(logb) / len(pts)
+        ebar = sum(loge) / len(pts)
+        denom = sum((b - bbar) ** 2 for b in logb)
+        if denom == 0:
+            raise ValueError("sweep points must span multiple batch sizes")
+        exponent = sum(
+            (b - bbar) * (e - ebar) for b, e in zip(logb, loge)
+        ) / denom
+        exponent = max(1.0, exponent)
+        # log scatter = mean_b [ log(event/dense) + log(M*b) - log(R*b^p) ]
+        log_scatter = sum(
+            math.log(p["event_us"] / p["dense_us"])
+            + math.log(dense_macs_per_batch * p["batch"])
+            - math.log(n_rows_total * p["batch"] ** exponent)
+            for p in pts
+        ) / len(pts)
+        return cls(
+            scatter_coeff=math.exp(log_scatter),
+            batch_exponent=exponent,
+            mac_coeff=1.0,
+        )
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "scatter_coeff": self.scatter_coeff,
+            "batch_exponent": self.batch_exponent,
+            "mac_coeff": self.mac_coeff,
+        }
+
+
 #: Default crossover model used by the fused executor; fitted to the
-#: CPU batch sweep (see ``BENCH_network.json`` -> ``batch_sweep``).
+#: CPU batch sweep (see ``BENCH_network.json`` -> ``batch_sweep``);
+#: ``tools/fit_cost_model.py`` refits these constants from the recorded
+#: sweep whenever the backend changes.
 DEFAULT_SERIAL_BATCH_COST = SerialBatchCostModel()
 
 

@@ -2,19 +2,31 @@
 
 Terminology follows the paper (§III):
 
-* **application graph** — one vertex per population (layer); edges are
-  projections (synaptic connections between populations).
+* **application graph** — :class:`Population` vertices connected by
+  :class:`Projection` edges (synaptic connections between populations).
+  :class:`SNNNetwork` is that graph: it validates shapes, topologically
+  orders the forward edges, and identifies **back-edges** (self-loops and
+  projections onto earlier populations) which the runtime routes through
+  a one-step-delayed feedback path.
 * **layer character** — the 4-tuple the classifier sees:
   (n_source, n_target, weight_density, delay_range).  This is all the
-  switching system may look at *before* compiling (paper §IV-B).
+  switching system may look at *before* compiling (paper §IV-B).  The
+  character is a **per-projection** property, so the switching system
+  prejudges arbitrary graphs exactly as it prejudges chains.
 * **machine graph** — sub-populations mapped onto PEs; produced by the
   paradigm compilers in :mod:`repro.core.serial_compiler` /
-  :mod:`repro.core.parallel_compiler`.
+  :mod:`repro.core.parallel_compiler`, one program per projection.
+
+The feed-forward chain the paper evaluates is the special case with one
+projection between each pair of consecutive populations; the chain
+constructor (``SNNNetwork(layers=[...])``) and :func:`feedforward_network`
+remain as thin builders over the graph form and produce bit-identical
+runtime behavior.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,6 +79,12 @@ class SNNLayer:
     inhibitory < 0); zero means no synapse.  ``delays`` is (n_source,
     n_target) int in [1, delay_range]; entries where weights == 0 are
     ignored.
+
+    ``pre``/``post`` name the source/target :class:`Population` when the
+    layer is used as an edge of an explicit application graph.  The chain
+    constructor never reads or writes them — it synthesizes its endpoints
+    positionally on the network (``SNNNetwork.endpoints``), so layer
+    objects can be shared between networks without corruption.
     """
 
     weights: np.ndarray
@@ -74,6 +92,8 @@ class SNNLayer:
     delay_range: int
     lif: LIFParams = dataclasses.field(default_factory=LIFParams)
     name: str = "layer"
+    pre: Optional[str] = None
+    post: Optional[str] = None
 
     def __post_init__(self) -> None:
         if self.weights.shape != self.delays.shape:
@@ -151,26 +171,407 @@ def random_layer(
     return SNNLayer(weights=weights, delays=delays, delay_range=delay_range, name=name)
 
 
-@dataclasses.dataclass
-class SNNNetwork:
-    """Application graph: a feed-forward chain of projections.
+@dataclasses.dataclass(frozen=True)
+class Population:
+    """A vertex of the application graph: one population of LIF neurons.
 
-    (The paper's evaluation networks — the 16 k dataset layers and the
-    2048-20-4 gesture model — are feed-forward chains; recurrent edges
-    would be additional projections onto the same machinery.)
+    ``lif`` optionally pins the population's neuron parameters; when
+    ``None`` they are derived from the (unique) LIF parameters of the
+    projections targeting it — the chain-compatible behavior where a
+    layer's ``lif`` governs its target neurons.
     """
 
-    layers: list
-    name: str = "snn"
+    name: str
+    size: int
+    lif: Optional[LIFParams] = None
+
+    def validate(self) -> None:
+        if not self.name:
+            raise ValueError("population needs a name")
+        if self.size <= 0:
+            raise ValueError(f"population {self.name!r} size must be > 0")
+
+
+@dataclasses.dataclass
+class Projection(SNNLayer):
+    """An edge of the application graph: a named synaptic projection.
+
+    Exactly an :class:`SNNLayer` (weights + delays + derived character —
+    the compilers and the classifier treat the two identically) that
+    *requires* its ``pre``/``post`` population endpoints.
+    """
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if not self.pre or not self.post:
+            raise ValueError(
+                f"projection {self.name!r} needs pre= and post= populations"
+            )
+
+
+def random_projection(
+    pre: Population,
+    post: Population,
+    density: float,
+    delay_range: int,
+    *,
+    seed: int,
+    inhibitory_fraction: float = 0.2,
+    delay_granularity: str = "source",
+    name: Optional[str] = None,
+) -> Projection:
+    """A :func:`random_layer` whose shape comes from its two populations."""
+    layer = random_layer(
+        pre.size, post.size, density, delay_range, seed=seed,
+        inhibitory_fraction=inhibitory_fraction,
+        delay_granularity=delay_granularity,
+        name=name or f"{pre.name}->{post.name}",
+    )
+    return Projection(
+        weights=layer.weights, delays=layer.delays,
+        delay_range=layer.delay_range, lif=layer.lif, name=layer.name,
+        pre=pre.name, post=post.name,
+    )
+
+
+class SNNNetwork:
+    """Application graph: :class:`Population` vertices, projection edges.
+
+    Two construction forms:
+
+    * **chain** (compatibility): ``SNNNetwork(layers=[l0, l1, ...])`` —
+      populations are synthesized from the layer sizes and each layer
+      becomes the projection between consecutive populations.  ``layers``
+      remains readable (it aliases ``projections``), so all existing
+      feed-forward code keeps working unchanged.
+    * **graph**: ``SNNNetwork(populations=[...], projections=[...])`` —
+      arbitrary projection graphs: fan-in / fan-out, skip connections,
+      self-loops, and recurrent edges.
+
+    On construction the network validates shapes (every projection's
+    endpoints must exist and match its weight matrix), computes a
+    **topological order** of the populations over the forward edges
+    (Kahn's algorithm with declared-order tie-breaking; cycles are broken
+    at the earliest-declared population of the cycle), and classifies
+    every projection: a **back-edge** is a self-loop or a projection onto
+    a population at-or-before its source in the topological order.  The
+    runtime cascades forward edges within a timestep in topological order
+    and routes back-edges through a one-step-delayed feedback ring, so a
+    spike crossing a back-edge of synaptic delay ``d`` arrives ``d + 1``
+    steps after emission.
+
+    Exactly one population may have no incoming projections — it is the
+    **input population** driven by the external spike train.
+
+    Graph-form construction validates eagerly.  The chain form defers
+    graph synthesis until a graph query (topology, runtime) needs it, so
+    compile-only uses — e.g. a bag of unrelated layers compiled for PE
+    accounting — keep working exactly as before the graph IR.
+    """
+
+    def __init__(
+        self,
+        layers: Optional[Sequence[SNNLayer]] = None,
+        name: str = "snn",
+        *,
+        populations: Optional[Sequence[Population]] = None,
+        projections: Optional[Sequence[SNNLayer]] = None,
+    ):
+        self.name = name
+        self._graph_built = False
+        if layers is not None:
+            if populations is not None or projections is not None:
+                raise ValueError(
+                    "pass either layers= (chain) or populations=/"
+                    "projections= (graph), not both"
+                )
+            if not layers:
+                raise ValueError("a chain network needs at least one layer")
+            self._projections: List[SNNLayer] = list(layers)
+            self._populations: Optional[List[Population]] = None
+        else:
+            if populations is None or projections is None:
+                raise ValueError(
+                    "SNNNetwork needs layers= (chain) or both populations= "
+                    "and projections= (graph)"
+                )
+            self._projections = list(projections)
+            self._populations = list(populations)
+            self._build_graph()
+
+    def _build_graph(self) -> None:
+        if self._populations is None:
+            self._populations, self._endpoints = self._chain_graph(
+                self._projections, self.name
+            )
+        else:
+            for e in self._projections:
+                if not getattr(e, "pre", None) or not getattr(e, "post", None):
+                    raise ValueError(
+                        f"graph projection {getattr(e, 'name', '?')!r} "
+                        f"needs pre= and post= populations"
+                    )
+            self._endpoints = [(e.pre, e.post) for e in self._projections]
+        self._validate()
+        self._order_graph()
+        self._graph_built = True
+
+    def _ensure_graph(self) -> None:
+        if not self._graph_built:
+            self._build_graph()
+
+    # -- chain compatibility --------------------------------------------------
+    @staticmethod
+    def _chain_graph(layers, name):
+        """Positional chain endpoints — the caller's layers are NOT
+        mutated (their ``pre``/``post`` fields are ignored), so layer
+        objects shared between several networks stay uncorrupted."""
+        if not layers:
+            raise ValueError("a chain network needs at least one layer")
+        pops = [Population(f"{name}.p0", layers[0].n_source)]
+        ends = []
+        for i, l in enumerate(layers):
+            if l.n_source != pops[-1].size:
+                raise ValueError(
+                    f"chain shape mismatch at layer {i} ({l.name!r}): "
+                    f"n_source {l.n_source} != previous n_target "
+                    f"{pops[-1].size}"
+                )
+            pops.append(Population(f"{name}.p{i + 1}", l.n_target))
+            ends.append((pops[-2].name, pops[-1].name))
+        return pops, ends
+
+    @property
+    def projections(self) -> List[SNNLayer]:
+        return self._projections
+
+    @property
+    def populations(self) -> List[Population]:
+        self._ensure_graph()
+        return self._populations
+
+    @property
+    def layers(self) -> List[SNNLayer]:
+        """The projections, in declaration order (chain-era alias)."""
+        return self._projections
 
     @property
     def layer_sizes(self) -> list:
-        sizes = [self.layers[0].n_source]
-        sizes += [l.n_target for l in self.layers]
+        sizes = [self._projections[0].n_source]
+        sizes += [l.n_target for l in self._projections]
         return sizes
 
+    @property
+    def endpoints(self) -> Tuple[Tuple[str, str], ...]:
+        """Per projection: its ``(pre, post)`` population names.
+
+        Graph-form networks read these off each projection; chain-form
+        networks synthesize them positionally (never mutating the layer
+        objects).
+        """
+        self._ensure_graph()
+        return tuple(self._endpoints)
+
+    @property
+    def is_chain(self) -> bool:
+        """A pure feed-forward chain (the pre-graph data model)."""
+        self._ensure_graph()
+        if self.back_edges or len(self._projections) != len(
+            self._populations
+        ) - 1:
+            return False
+        cur = self._populations[self.input_index].name
+        for pre, post in self._endpoints:
+            if pre != cur:
+                return False
+            cur = post
+        return True
+
+    # -- validation + ordering ------------------------------------------------
+    def _validate(self) -> None:
+        if not self._projections:
+            raise ValueError("network needs at least one projection")
+        seen = set()
+        for p in self._populations:
+            p.validate()
+            if p.name in seen:
+                raise ValueError(f"duplicate population name {p.name!r}")
+            seen.add(p.name)
+        self._pop_index: Dict[str, int] = {
+            p.name: i for i, p in enumerate(self._populations)
+        }
+        for e, (pre, post) in zip(self._projections, self._endpoints):
+            if pre not in self._pop_index or post not in self._pop_index:
+                raise ValueError(
+                    f"projection {e.name!r} references unknown population "
+                    f"({pre!r} -> {post!r})"
+                )
+            if e.n_source != self._populations[self._pop_index[pre]].size:
+                raise ValueError(
+                    f"projection {e.name!r}: n_source {e.n_source} != "
+                    f"population {pre!r} size "
+                    f"{self._populations[self._pop_index[pre]].size}"
+                )
+            if e.n_target != self._populations[self._pop_index[post]].size:
+                raise ValueError(
+                    f"projection {e.name!r}: n_target {e.n_target} != "
+                    f"population {post!r} size "
+                    f"{self._populations[self._pop_index[post]].size}"
+                )
+
+    def _order_graph(self) -> None:
+        n = len(self._populations)
+        idx = self._pop_index
+        preds: List[set] = [set() for _ in range(n)]
+        for pre, post in self._endpoints:
+            s, t = idx[pre], idx[post]
+            if s != t:
+                preds[t].add(s)
+        placed: set = set()
+        order: List[int] = []
+        while len(order) < n:
+            ready = [
+                i for i in range(n)
+                if i not in placed and not (preds[i] - placed)
+            ]
+            if ready:
+                pick = min(ready)
+            else:
+                # no acyclic candidate left: break a cycle at the
+                # earliest-declared population of a SOURCE cycle (an SCC
+                # with no unplaced predecessors outside itself) — a
+                # population merely downstream of a cycle is never
+                # picked, so only genuinely cyclic in-edges become
+                # back-edges, independent of declaration order
+                pick = self._stalled_cycle_pick(
+                    [i for i in range(n) if i not in placed], preds
+                )
+            placed.add(pick)
+            order.append(pick)
+        self._topo_order: Tuple[int, ...] = tuple(order)
+        self._topo_pos = {p: k for k, p in enumerate(order)}
+        self._back_edges: FrozenSet[int] = frozenset(
+            i for i, (pre, post) in enumerate(self._endpoints)
+            if self._topo_pos[idx[post]] <= self._topo_pos[idx[pre]]
+        )
+        self._in_edges: Tuple[Tuple[int, ...], ...] = tuple(
+            tuple(
+                i for i, (_, post) in enumerate(self._endpoints)
+                if idx[post] == p
+            )
+            for p in range(n)
+        )
+        sources = [p for p in range(n) if not self._in_edges[p]]
+        if len(sources) != 1:
+            names = [self._populations[p].name for p in sources]
+            raise ValueError(
+                "the application graph needs exactly one population with "
+                f"no incoming projections (the external input); got "
+                f"{names or 'none'}"
+            )
+        self._input_index: int = sources[0]
+
+    @staticmethod
+    def _stalled_cycle_pick(unplaced: List[int], preds: List[set]) -> int:
+        """Earliest-declared population inside a *source* cycle.
+
+        ``unplaced`` nodes at a Kahn stall all have unplaced
+        predecessors; the condensation of their subgraph is a DAG whose
+        source components are exactly the cycles nothing else feeds.
+        Breaking there (and only there) keeps every non-cyclic forward
+        edge forward whatever the declaration order.
+        """
+        un = set(unplaced)
+        succs = {u: [v for v in unplaced if u in preds[v]] for u in unplaced}
+        reach: Dict[int, set] = {}
+        for u in unplaced:
+            seen: set = set()
+            stack = [u]
+            while stack:
+                x = stack.pop()
+                for y in succs[x]:
+                    if y not in seen:
+                        seen.add(y)
+                        stack.append(y)
+            reach[u] = seen
+        candidates = []
+        for u in unplaced:
+            comp = {u} | {
+                v for v in unplaced if v in reach[u] and u in reach[v]
+            }
+            if all(
+                p in comp or p not in un
+                for v in comp for p in preds[v]
+            ):
+                candidates.append(u)        # u sits in a source SCC
+        return min(candidates)
+
+    # -- graph queries --------------------------------------------------------
+    @property
+    def topo_order(self) -> Tuple[int, ...]:
+        """Population indices in topological order of the forward edges."""
+        self._ensure_graph()
+        return self._topo_order
+
+    @property
+    def back_edges(self) -> FrozenSet[int]:
+        """Projection indices classified as back-edges (self-loops and
+        projections onto populations at-or-before their source)."""
+        self._ensure_graph()
+        return self._back_edges
+
+    @property
+    def in_edges(self) -> Tuple[Tuple[int, ...], ...]:
+        """Per population (declared index): in-edge projection indices in
+        declaration order."""
+        self._ensure_graph()
+        return self._in_edges
+
+    @property
+    def input_index(self) -> int:
+        """Declared index of the population the external train drives."""
+        self._ensure_graph()
+        return self._input_index
+
+    def population_index(self, name: str) -> int:
+        self._ensure_graph()
+        return self._pop_index[name]
+
+    @property
+    def input_population(self) -> Population:
+        return self.populations[self.input_index]
+
+    @property
+    def n_input(self) -> int:
+        """Width of the external spike train (input population size)."""
+        return self.populations[self.input_index].size
+
+    def population_lif(self, pop: int) -> LIFParams:
+        """Effective LIF parameters for one population (declared index).
+
+        The population's own ``lif`` wins; otherwise the unique ``lif``
+        shared by its incoming projections (chain-compatible: a layer's
+        ``lif`` governs its target neurons).  Ambiguity is an error —
+        set ``Population.lif`` explicitly for multi-in-edge populations
+        whose projections disagree.
+        """
+        p = self.populations[pop]
+        if p.lif is not None:
+            return p.lif
+        lifs = {self.projections[i].lif for i in self.in_edges[pop]}
+        if not lifs:
+            raise ValueError(
+                f"input population {p.name!r} has no LIF parameters"
+            )
+        if len(lifs) > 1:
+            raise ValueError(
+                f"population {p.name!r} has in-projections with differing "
+                f"LIF parameters; set Population.lif explicitly"
+            )
+        return next(iter(lifs))
+
     def characters(self) -> list:
-        return [l.character() for l in self.layers]
+        return [l.character() for l in self.projections]
 
 
 def feedforward_network(

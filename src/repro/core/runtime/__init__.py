@@ -1,13 +1,21 @@
-from .reference import LIFState, init_state, run_reference
+from .reference import LIFState, init_state, run_graph_reference, run_reference
 from .serial_runtime import (
     SerialExecutable,
     dense_serial_weights,
     lower_serial,
     run_serial,
+    serial_project,
+    serial_project_dense,
     serial_step_dense,
 )
-from .parallel_runtime import ParallelExecutable, lower_parallel, run_parallel
+from .parallel_runtime import (
+    ParallelExecutable,
+    lower_parallel,
+    parallel_project,
+    run_parallel,
+)
 from .executor import (
+    GraphPlan,
     LayerMeta,
     NetworkExecutable,
     get_layer_executable,
@@ -35,12 +43,14 @@ def lowering_total() -> int:
 
 
 __all__ = [
-    "run_network", "run_network_layerwise",
+    "run_network", "run_network_layerwise", "run_graph_reference",
     "LIFState", "init_state", "run_reference",
     "SerialExecutable", "lower_serial", "run_serial",
+    "serial_project", "serial_project_dense",
     "serial_step_dense", "dense_serial_weights",
-    "ParallelExecutable", "lower_parallel", "run_parallel",
-    "LayerMeta", "NetworkExecutable",
+    "ParallelExecutable", "lower_parallel", "parallel_project",
+    "run_parallel",
+    "GraphPlan", "LayerMeta", "NetworkExecutable",
     "get_layer_executable", "network_executable",
     "release_network_executable",
     "lowering_counts", "lowering_total",

@@ -1,23 +1,34 @@
-"""Fused whole-network executor — one jitted scan for the mixed network.
+"""Fused whole-network executor — one jitted scan for the application graph.
 
-On SpiNNaker2 every layer advances together each timestep: the chip runs a
-lockstep per-timestep pipeline across all PEs (arXiv 1911.02385), whatever
-paradigm each layer's PEs execute.  This module mirrors that structure on
-the accelerator:
+On SpiNNaker2 every population advances together each timestep: the chip
+runs a lockstep per-timestep pipeline across all PEs (arXiv 1911.02385),
+whatever paradigm each projection's PEs execute.  This module mirrors that
+structure on the accelerator:
 
 * :func:`get_layer_executable` lowers a :class:`CompiledLayer`'s program
-  once and caches the result on the compiled layer (keyed by program
+  once and caches the result on the compiled projection (keyed by program
   identity — the executable lives exactly as long as the program it was
   lowered from), so repeated runs never re-lower.
-* :class:`NetworkExecutable` stacks the per-layer state (LIF ``v``/``z``,
-  f32 delay rings, int8 spike-history rings) and runs the entire mixed
-  serial/parallel network in a **single jitted ``jax.lax.scan`` over
-  timesteps**.  Layer outputs cascade inside the step; nothing crosses the
-  host boundary until the final spike trains are fetched.
+* :class:`NetworkExecutable` executes the **application graph** of
+  :class:`~repro.core.layer.SNNNetwork` — populations as vertices,
+  projections as edges — in a **single jitted ``jax.lax.scan`` over
+  timesteps**.  Within a timestep, forward projections cascade in the
+  graph's topological order; **back-edges** (self-loops and projections
+  onto earlier populations) read their source population's spikes from a
+  one-step-delayed **feedback ring** carried in the scan state, so a
+  spike crossing a back-edge of synaptic delay ``d`` arrives ``d + 1``
+  steps after emission.  A pure feed-forward chain takes exactly the
+  pre-graph code path (single in-edge per population, empty feedback
+  ring) and is bit-identical to it.
 
-This replaces the per-layer execution mode (kept as
-:func:`repro.core.runtime.network.run_network_layerwise`) that ran N
-independent scans with a host sync and a fresh lowering between layers.
+Execution is factored per the graph: each projection contributes a
+*synaptic current* through its paradigm's machinery
+(:func:`~repro.core.runtime.serial_runtime.serial_project` /
+:func:`~repro.core.runtime.parallel_runtime.parallel_project`); a
+population sums the currents of all its in-projections and runs ONE fused
+LIF update (:func:`repro.kernels.lif_update`).  All weights are
+int8-magnitude integers, so the sums are exact in float32 and converging
+projections stay bit-exact.
 
 Batched and sharded execution (see ``docs/architecture.md``):
 
@@ -27,14 +38,21 @@ Batched and sharded execution (see ``docs/architecture.md``):
   request, ``jax.vmap``-ed over the request axis, ``valid_steps`` masking
   preserved per lane.  Bit-identical to the fused path (integer
   accumulation), but lets XLA batch each request's program independently.
-* Serial layers pick between the event-driven ``segment_sum`` form and
-  the dense matmul fallback per launch batch
+* Serial projections pick between the event-driven ``segment_sum`` form
+  and the dense matmul fallback per launch batch
   (:class:`repro.core.cost_model.SerialBatchCostModel`); the choice is
   recorded in ``CompileReport.serial_forms`` and never changes outputs.
 * :meth:`NetworkExecutable.shard` places the lowered weight/delay
   operands by the logical-axis rules in
   :mod:`repro.distributed.sharding` (``snn_rules``: batch -> data,
   neurons -> model); on a single device it is the identity fallback.
+
+The scan carry (membrane potentials, delay rings, spike-history rings,
+feedback ring) is **donated** to the jitted entries
+(``donate_argnums``), so XLA updates the state buffers in place instead
+of double-buffering them; fresh zero states are cheap to rebuild per
+launch.  Set ``NetworkExecutable.donate = False`` to measure the
+difference (``benchmarks/bench_network.py`` records it).
 """
 from __future__ import annotations
 
@@ -47,19 +65,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...distributed import sharding as shardlib
+from ...kernels.lif_update import lif_update
 from ..cost_model import DEFAULT_SERIAL_BATCH_COST, SerialBatchCostModel
 from ..layer import LIFParams, SNNNetwork
 from ..parallel_compiler import ParallelProgram
 from ..serial_compiler import SerialProgram
 from ..switching import CompiledLayer, CompileReport
-from .parallel_runtime import ParallelExecutable, lower_parallel, parallel_step
-from .reference import init_state
+from .parallel_runtime import (
+    ParallelExecutable,
+    lower_parallel,
+    parallel_project,
+)
 from .serial_runtime import (
     SerialExecutable,
     dense_serial_weights,
     lower_serial,
-    serial_step,
-    serial_step_dense,
+    serial_project,
+    serial_project_dense,
 )
 
 
@@ -88,7 +110,11 @@ def get_layer_executable(
 
 @dataclasses.dataclass(frozen=True)
 class LayerMeta:
-    """Static (hashable) per-layer facts baked into the jitted scan."""
+    """Static (hashable) per-projection facts baked into the jitted scan.
+
+    ``alpha``/``v_th`` are the *target population's* effective LIF
+    parameters (for a chain: the layer's own ``lif``, as before).
+    """
 
     paradigm: str        # "serial" | "parallel"
     n_source: int
@@ -106,6 +132,73 @@ class LayerMeta:
         return max(1, self.delay_range)
 
 
+@dataclasses.dataclass(frozen=True)
+class GraphPlan:
+    """Static (hashable) application-graph structure baked into the scan.
+
+    Population indices are the network's *declared* indices; only the
+    iteration order (``update_order``) is topological.  The input
+    population carries dummy LIF constants (it has no neural update —
+    its "spikes" are the external train).
+    """
+
+    pop_sizes: Tuple[int, ...]
+    input_pop: int                        # declared index of the input pop
+    update_order: Tuple[int, ...]         # non-input pops, topological order
+    pop_alpha: Tuple[float, ...]
+    pop_vth: Tuple[float, ...]
+    in_edges: Tuple[Tuple[int, ...], ...]  # per pop: in-projection indices
+    proj_src: Tuple[int, ...]             # per projection: source pop
+    proj_tgt: Tuple[int, ...]             # per projection: target pop
+    proj_back: Tuple[bool, ...]           # per projection: back-edge?
+    back_sources: Tuple[int, ...]         # pops carried in the feedback ring
+
+
+def _graph_plan(net: SNNNetwork) -> GraphPlan:
+    """Extract the static execution plan from the application graph."""
+    n = len(net.populations)
+    update_order = tuple(p for p in net.topo_order if p != net.input_index)
+    alpha, vth = [0.0] * n, [1.0] * n
+    for p in update_order:
+        lif = net.population_lif(p)
+        alpha[p], vth[p] = float(lif.alpha), float(lif.v_th)
+    endpoints = net.endpoints
+    proj_src = tuple(net.population_index(pre) for pre, _ in endpoints)
+    return GraphPlan(
+        pop_sizes=tuple(p.size for p in net.populations),
+        input_pop=net.input_index,
+        update_order=update_order,
+        pop_alpha=tuple(alpha),
+        pop_vth=tuple(vth),
+        in_edges=tuple(net.in_edges),
+        proj_src=proj_src,
+        proj_tgt=tuple(
+            net.population_index(post) for _, post in endpoints
+        ),
+        proj_back=tuple(
+            i in net.back_edges for i in range(len(endpoints))
+        ),
+        back_sources=tuple(sorted({proj_src[i] for i in net.back_edges})),
+    )
+
+
+def _chain_plan(metas: Tuple[LayerMeta, ...]) -> GraphPlan:
+    """The feed-forward chain plan (for handles built without a network)."""
+    n = len(metas) + 1
+    return GraphPlan(
+        pop_sizes=(metas[0].n_source,) + tuple(m.n_target for m in metas),
+        input_pop=0,
+        update_order=tuple(range(1, n)),
+        pop_alpha=(0.0,) + tuple(m.alpha for m in metas),
+        pop_vth=(1.0,) + tuple(m.v_th for m in metas),
+        in_edges=((),) + tuple((i,) for i in range(len(metas))),
+        proj_src=tuple(range(len(metas))),
+        proj_tgt=tuple(range(1, n)),
+        proj_back=(False,) * len(metas),
+        back_sources=(),
+    )
+
+
 def _layer_params(exe) -> Tuple[jnp.ndarray, ...]:
     """The traced operand arrays of one lowered layer (a pytree leaf tuple)."""
     if isinstance(exe, SerialExecutable):
@@ -113,33 +206,61 @@ def _layer_params(exe) -> Tuple[jnp.ndarray, ...]:
     return (exe.wdm_stack, exe.col_source, exe.col_delay)
 
 
-def _init_carry(metas: Tuple[LayerMeta, ...], batch: int):
-    states = []
+def _init_graph_carry(
+    plan: GraphPlan, metas: Tuple[LayerMeta, ...], batch: int
+):
+    """Fresh zero scan state: per-projection rings, per-population LIF
+    state, and the back-edge feedback ring.  Built OUTSIDE the jitted scan
+    so the jit entries can donate (and update in place) these buffers."""
+    proj = []
     for meta in metas:
         if meta.paradigm == "serial":
-            states.append(init_state(batch, meta.n_target, meta.delay_range))
-        else:
-            x_hist = jnp.zeros(
-                (meta.ring_depth, meta.n_source, batch), jnp.int8
+            proj.append(
+                jnp.zeros(
+                    (meta.delay_range + 1, batch, meta.n_target), jnp.float32
+                )
             )
-            states.append((x_hist, init_state(batch, meta.n_target, 0)))
-    return tuple(states)
+        else:
+            proj.append(
+                jnp.zeros((meta.ring_depth, meta.n_source, batch), jnp.int8)
+            )
+    pop_v = tuple(
+        jnp.zeros((batch, plan.pop_sizes[p]), jnp.float32)
+        for p in plan.update_order
+    )
+    pop_z = tuple(
+        jnp.zeros((batch, plan.pop_sizes[p]), jnp.float32)
+        for p in plan.update_order
+    )
+    feedback = tuple(
+        jnp.zeros((batch, plan.pop_sizes[s]), jnp.float32)
+        for s in plan.back_sources
+    )
+    return (tuple(proj), pop_v, pop_z, feedback)
+
+
+def _carry_axes(plan: GraphPlan, metas: Tuple[LayerMeta, ...]):
+    """Batch-axis position of every carry leaf (the vmap in_axes pytree)."""
+    proj = tuple(1 if m.paradigm == "serial" else 2 for m in metas)
+    pop = tuple(0 for _ in plan.update_order)
+    fb = tuple(0 for _ in plan.back_sources)
+    return (proj, pop, pop, fb)
 
 
 def _scan_network(
+    plan: GraphPlan,
     metas: Tuple[LayerMeta, ...],
-    forms: Tuple[str, ...],       # per layer: "event" | "dense" | "-"
+    forms: Tuple[str, ...],       # per projection: "event" | "dense" | "-"
     interpret: bool | None,
     params: List[Tuple[jnp.ndarray, ...]],
+    states,                       # _init_graph_carry output (donated)
     spikes: jnp.ndarray,          # (T, B, n_input) f32
     valid_steps: jnp.ndarray | None = None,   # (B,) i32 true length per request
 ):
-    batch = spikes.shape[1]
-
     # Step-count mask: batch slot b is live while t < valid_steps[b].  The
     # mask is applied entirely OUTSIDE the scan (one vectorized multiply on
-    # the input train and one per layer's stacked output) so masking costs
-    # nothing per timestep.  Padded timesteps are provably inert per
+    # the input train and one per population's stacked output) so masking
+    # costs nothing per timestep.  Padded timesteps are provably inert per
     # request: the input mask stops them injecting external spikes, the
     # output mask forces their emitted spikes to exact zeros, and because
     # the scan is causal and batch slots are independent, the first
@@ -153,64 +274,118 @@ def _scan_network(
         ).astype(spikes.dtype)[:, :, None]               # (T, B, 1)
         spikes = spikes * live
 
-    def step(carry, x_t):
-        t, states = carry
-        x = x_t
-        new_states, outs = [], []
-        for meta, form, p, st in zip(metas, forms, params, states):
-            if meta.paradigm == "serial":
-                step_fn = serial_step_dense if form == "dense" else serial_step
-                st, z = step_fn(
-                    *p, st, x, t,
-                    delay_range=meta.delay_range, n_target=meta.n_target,
-                    alpha=meta.alpha, v_th=meta.v_th, interpret=interpret,
-                )
-            else:
-                x_hist, lif_st = st
-                x_hist, lif_st, z = parallel_step(
-                    *p, x_hist, lif_st, x, t,
-                    alpha=meta.alpha, v_th=meta.v_th, interpret=interpret,
-                )
-                st = (x_hist, lif_st)
-            new_states.append(st)
-            outs.append(z)
-            x = z                  # cascade inside the device step
-        return (t + 1, tuple(new_states)), tuple(outs)
+    vz_slot = {p: k for k, p in enumerate(plan.update_order)}
+    fb_slot = {s: k for k, s in enumerate(plan.back_sources)}
 
-    init = (jnp.int32(0), _init_carry(metas, batch))
-    (_, _), outs = jax.lax.scan(step, init, spikes)
+    def step(carry, x_t):
+        t, proj_states, pop_v, pop_z, feedback = carry
+        pop_out = [None] * len(plan.pop_sizes)
+        pop_out[plan.input_pop] = x_t
+        new_proj = list(proj_states)
+        new_v, new_z = list(pop_v), list(pop_z)
+        for p in plan.update_order:
+            k = vz_slot[p]
+            i_nb = None               # summed current, (n_target, B)
+            for ei in plan.in_edges[p]:
+                meta, form = metas[ei], forms[ei]
+                # back-edges read the source's spikes from the previous
+                # timestep (feedback ring); forward edges cascade within
+                # the step in topological order
+                x = (
+                    feedback[fb_slot[plan.proj_src[ei]]]
+                    if plan.proj_back[ei]
+                    else pop_out[plan.proj_src[ei]]
+                )
+                if meta.paradigm == "serial":
+                    proj_fn = (
+                        serial_project_dense
+                        if form == "dense"
+                        else serial_project
+                    )
+                    ring, i_bt = proj_fn(
+                        *params[ei], proj_states[ei], x, t,
+                        delay_range=meta.delay_range,
+                        n_target=meta.n_target, interpret=interpret,
+                    )
+                    new_proj[ei] = ring
+                    i_e = i_bt.T
+                else:
+                    hist, i_e = parallel_project(
+                        *params[ei], proj_states[ei], x, t,
+                        interpret=interpret,
+                    )
+                    new_proj[ei] = hist
+                i_nb = i_e if i_nb is None else i_nb + i_e
+            v_new, z_new = lif_update(
+                i_nb, pop_v[k].T, pop_z[k].T,
+                alpha=plan.pop_alpha[p], v_th=plan.pop_vth[p],
+                interpret=interpret,
+            )
+            new_v[k], new_z[k] = v_new.T, z_new.T
+            pop_out[p] = z_new.T
+        new_feedback = tuple(pop_out[s] for s in plan.back_sources)
+        # emit ONE train per (non-input) population — a fan-in target is
+        # stacked once however many projections converge on it; the
+        # launch wrappers expand to the per-projection API view outside
+        # the scan (aliased, no extra device buffers)
+        outs = tuple(pop_out[p] for p in plan.update_order)
+        carry = (
+            t + 1, tuple(new_proj), tuple(new_v), tuple(new_z), new_feedback
+        )
+        return carry, outs
+
+    init = (jnp.int32(0),) + states
+    final, outs = jax.lax.scan(step, init, spikes)
     if live is not None:
         outs = tuple(z * live for z in outs)
-    return outs
+    # the final carry is returned (and dropped by the launch wrappers) so
+    # the donated input state buffers can alias it — the scan then runs
+    # in place in the donated membrane / ring buffers
+    return outs, final[1:]
 
 
 def _batched_scan(
+    plan: GraphPlan,
     metas: Tuple[LayerMeta, ...],
     forms: Tuple[str, ...],
     interpret: bool | None,
     params: List[Tuple[jnp.ndarray, ...]],
+    states,                       # full-batch carry, vmapped per lane
     spikes: jnp.ndarray,          # (T, B, n_input) f32
     valid_steps: jnp.ndarray | None = None,   # (B,) i32
 ):
     """``jax.vmap`` of the single-request scan over the request axis.
 
     Each request runs its own width-1 scan; vmap batches them.  The
-    per-lane ``valid_steps`` mask is preserved, so lanes with 0 valid
-    steps (padded slots) emit exact zeros just like the fused path.
+    full-batch carry is split per lane along each leaf's batch axis
+    (``_carry_axes``) and rebuilt at width 1 inside the lane, so the
+    per-lane ``valid_steps`` mask and the donated-state layout are
+    preserved — lanes with 0 valid steps (padded slots) emit exact zeros
+    just like the fused path.
     """
+    axes = _carry_axes(plan, metas)
 
-    def one(sp, vs):              # sp (T, n_in), vs () i32 or None
-        outs = _scan_network(
-            metas, forms, interpret, params, sp[:, None, :],
+    def one(st, sp, vs):          # sp (T, n_in), vs () i32 or None
+        st = jax.tree_util.tree_map(
+            lambda a, ax: jnp.expand_dims(a, ax), st, axes
+        )
+        outs, fin = _scan_network(
+            plan, metas, forms, interpret, params, st, sp[:, None, :],
             None if vs is None else vs[None],
         )
-        return tuple(z[:, 0] for z in outs)
+        fin = jax.tree_util.tree_map(
+            lambda a, ax: jnp.squeeze(a, ax), fin, axes
+        )
+        return tuple(z[:, 0] for z in outs), fin
 
     if valid_steps is None:
-        return jax.vmap(lambda sp: one(sp, None), in_axes=1, out_axes=1)(
-            spikes
-        )
-    return jax.vmap(one, in_axes=(1, 0), out_axes=1)(spikes, valid_steps)
+        return jax.vmap(
+            lambda st, sp: one(st, sp, None),
+            in_axes=(axes, 1), out_axes=(1, axes),
+        )(states, spikes)
+    return jax.vmap(one, in_axes=(axes, 1, 0), out_axes=(1, axes))(
+        states, spikes, valid_steps
+    )
 
 
 def _param_axes(meta: LayerMeta, form: str) -> Tuple[Tuple, ...]:
@@ -224,7 +399,7 @@ def _param_axes(meta: LayerMeta, form: str) -> Tuple[Tuple, ...]:
 
 
 class NetworkExecutable:
-    """A whole compiled network, lowered once, runnable in one device scan."""
+    """A whole compiled application graph, lowered once, run in one scan."""
 
     def __init__(
         self,
@@ -232,12 +407,16 @@ class NetworkExecutable:
         params: List[Tuple[jnp.ndarray, ...]],
         name: str = "snn",
         *,
+        plan: GraphPlan | None = None,
         report: CompileReport | None = None,
         cost_model: SerialBatchCostModel | None = None,
     ):
         self.metas = tuple(metas)
         self.params = list(params)
         self.name = name
+        #: The application-graph execution plan; a plain chain when the
+        #: handle was constructed from bare metas.
+        self.plan = plan or (_chain_plan(self.metas) if self.metas else None)
         #: Serving-layer routing tag: the registered model name this
         #: handle serves (set by ``network_executable(..., model=...)``).
         self.model: str | None = None
@@ -246,7 +425,10 @@ class NetworkExecutable:
         self.report = report
         #: Crossover model deciding event vs dense serial form per batch.
         self.cost_model = cost_model or DEFAULT_SERIAL_BATCH_COST
-        self._fns = {}       # (path, interpret, forms) -> jitted scan
+        #: Donate the scan carry to the jitted entries so membrane / ring
+        #: buffers update in place (fresh zeros are rebuilt per launch).
+        self.donate = True
+        self._fns = {}       # (path, interpret, forms, donate) -> jitted scan
         self._dense = {}     # layer index -> (d_slots, S, T) dense operand
         self._mesh = None    # set by shard(); None = identity fallback
         self._rules = None
@@ -259,17 +441,21 @@ class NetworkExecutable:
     def build(cls, net: SNNNetwork, report: CompileReport) -> "NetworkExecutable":
         if len(report.layers) != len(net.layers):
             raise ValueError("report does not match network")
+        plan = _graph_plan(net)
         metas, params = [], []
-        for layer, compiled in zip(net.layers, report.layers):
+        for i, (layer, compiled) in enumerate(
+            zip(net.layers, report.layers)
+        ):
             exe = get_layer_executable(compiled, layer.lif)
+            tgt = plan.proj_tgt[i]
             metas.append(
                 LayerMeta(
                     paradigm=compiled.paradigm,
                     n_source=exe.n_source,
                     n_target=exe.n_target,
                     delay_range=exe.delay_range,
-                    alpha=exe.lif.alpha,
-                    v_th=exe.lif.v_th,
+                    alpha=plan.pop_alpha[tgt],
+                    v_th=plan.pop_vth[tgt],
                     n_rows=int(
                         exe.row_weight.shape[0]
                         if isinstance(exe, SerialExecutable)
@@ -280,21 +466,23 @@ class NetworkExecutable:
             params.append(_layer_params(exe))
         return cls(
             tuple(metas), params, name=getattr(net, "name", "snn"),
-            report=report,
+            plan=plan, report=report,
         )
 
     @property
     def n_input(self) -> int:
-        return self.metas[0].n_source
+        """Width of the external spike train (input population size)."""
+        return self.plan.pop_sizes[self.plan.input_pop]
 
     # -- serial kernel-form selection ----------------------------------------
     def serial_forms(
         self, batch: int, serial_form: str = "auto"
     ) -> Tuple[str, ...]:
-        """Per-layer kernel form at this batch: "event"|"dense" ("-" = parallel).
+        """Per-projection kernel form at this batch: "event"|"dense" ("-" =
+        parallel).
 
-        ``serial_form`` forces every serial layer onto one form
-        ("event" / "dense"); "auto" asks the cost model per layer —
+        ``serial_form`` forces every serial projection onto one form
+        ("event" / "dense"); "auto" asks the cost model per projection —
         dense once ``batch`` crosses
         :meth:`~repro.core.cost_model.SerialBatchCostModel.crossover_batch`.
         """
@@ -354,7 +542,7 @@ class NetworkExecutable:
     def shard(self, mesh=None, rules: dict | None = None) -> "NetworkExecutable":
         """Place the lowered operands by the SNN logical-axis rules.
 
-        Routes every layer's weight/delay operands through
+        Routes every projection's weight/delay operands through
         :func:`repro.distributed.sharding.snn_rules` (neurons -> model,
         rows -> model; the launch paths place the request batch on the
         data axis).  With one visible device (:func:`snn_mesh` returns
@@ -419,13 +607,36 @@ class NetworkExecutable:
         return valid_steps
 
     def _get_fn(self, path: str, interpret, forms: Tuple[str, ...]):
-        key = (path, interpret, forms)
+        key = (path, interpret, forms, self.donate)
         fn = self._fns.get(key)
         if fn is None:
             scan = _batched_scan if path == "vmap" else _scan_network
-            fn = jax.jit(partial(scan, self.metas, forms, interpret))
+            fn = jax.jit(
+                partial(scan, self.plan, self.metas, forms, interpret),
+                # donate the carry (arg 1: states) so membrane / ring
+                # buffers update in place
+                donate_argnums=(1,) if self.donate else (),
+            )
             self._fns[key] = fn
         return fn
+
+    def _launch(self, path, spikes, valid_steps, interpret, serial_form):
+        valid_steps = self._check_shapes(spikes, valid_steps)
+        forms = self.serial_forms(spikes.shape[1], serial_form)
+        self._record_forms(
+            "vmap" if path == "vmap" else "fused", spikes.shape[1], forms
+        )
+        fn = self._get_fn(path, interpret, forms)
+        spikes, valid_steps = self._place_inputs(
+            jnp.asarray(spikes, jnp.float32), valid_steps
+        )
+        states = _init_graph_carry(self.plan, self.metas, spikes.shape[1])
+        outs, _final = fn(self._params_for(forms), states, spikes, valid_steps)
+        # per-population device trains -> the per-projection API view
+        # (entry i = projection i's target population; fan-in entries
+        # alias the same array)
+        slot = {p: k for k, p in enumerate(self.plan.update_order)}
+        return tuple(outs[slot[tgt]] for tgt in self.plan.proj_tgt)
 
     def run_device(
         self,
@@ -435,26 +646,24 @@ class NetworkExecutable:
         interpret: bool | None = None,
         serial_form: str = "auto",
     ) -> Tuple[jnp.ndarray, ...]:
-        """Per-layer spike trains as device arrays — no host sync.
+        """Per-projection spike trains as device arrays — no host sync.
 
-        Callers that time this must ``jax.block_until_ready`` the result.
-        With ``valid_steps``, batch slot ``b`` is masked after its first
-        ``valid_steps[b]`` timesteps: the live prefix is bit-identical to an
-        unmasked run and every padded timestep emits exact zeros, so padded
+        Entry ``i`` is the spike train of projection ``i``'s *target
+        population* (for a chain: exactly the per-layer outputs of the
+        pre-graph executor).  Callers that time this must
+        ``jax.block_until_ready`` the result.  With ``valid_steps``,
+        batch slot ``b`` is masked after its first ``valid_steps[b]``
+        timesteps: the live prefix is bit-identical to an unmasked run
+        and every padded timestep emits exact zeros, so padded
         micro-batches are provably inert per request.  ``serial_form``
-        forces the serial kernel form ("auto" lets the cost model pick per
-        layer); the form never changes outputs, only throughput.
+        forces the serial kernel form ("auto" lets the cost model pick
+        per projection); the form never changes outputs, only throughput.
         """
         if not self.metas:
             return ()
-        valid_steps = self._check_shapes(spikes, valid_steps)
-        forms = self.serial_forms(spikes.shape[1], serial_form)
-        self._record_forms("fused", spikes.shape[1], forms)
-        fn = self._get_fn("fused", interpret, forms)
-        spikes, valid_steps = self._place_inputs(
-            jnp.asarray(spikes, jnp.float32), valid_steps
+        return self._launch(
+            "fused", spikes, valid_steps, interpret, serial_form
         )
-        return fn(self._params_for(forms), spikes, valid_steps)
 
     def run_batched(
         self,
@@ -475,14 +684,9 @@ class NetworkExecutable:
         """
         if not self.metas:
             return ()
-        valid_steps = self._check_shapes(spikes, valid_steps)
-        forms = self.serial_forms(spikes.shape[1], serial_form)
-        self._record_forms("vmap", spikes.shape[1], forms)
-        fn = self._get_fn("vmap", interpret, forms)
-        spikes, valid_steps = self._place_inputs(
-            jnp.asarray(spikes, jnp.float32), valid_steps
+        return self._launch(
+            "vmap", spikes, valid_steps, interpret, serial_form
         )
-        return fn(self._params_for(forms), spikes, valid_steps)
 
     def run(
         self,
@@ -493,7 +697,7 @@ class NetworkExecutable:
         serial_form: str = "auto",
         batched: bool = False,
     ) -> List[np.ndarray]:
-        """Returns the per-layer spike trains [(T, B, n_l) ...]."""
+        """Returns the per-projection spike trains [(T, B, n_l) ...]."""
         launch = self.run_batched if batched else self.run_device
         outs = launch(
             spikes, valid_steps=valid_steps, interpret=interpret,
@@ -504,19 +708,24 @@ class NetworkExecutable:
 
 
 def _matches_network(exe: NetworkExecutable, net: SNNNetwork) -> bool:
-    """Does the cached executable still reflect the net's sizes and LIF?
+    """Does the cached executable still reflect the net's graph and LIF?
 
-    The network contributes only layer sizes and LIF parameters to the
-    executable (weights come from the report's programs), so these are the
-    facts that can go stale.
+    The network contributes the graph plan (topology, population sizes,
+    effective LIF parameters) and projection shapes to the executable
+    (weights come from the report's programs), so those are the facts
+    that can go stale.
     """
     if len(exe.metas) != len(net.layers):
+        return False
+    try:
+        plan = _graph_plan(net)
+    except (ValueError, KeyError):
+        return False
+    if plan != exe.plan:
         return False
     return all(
         meta.n_source == layer.n_source
         and meta.n_target == layer.n_target
-        and meta.alpha == layer.lif.alpha
-        and meta.v_th == layer.lif.v_th
         for meta, layer in zip(exe.metas, net.layers)
     )
 

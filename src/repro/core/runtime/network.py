@@ -1,17 +1,23 @@
 """Network-level inference through the switching system.
 
 Runs a compiled :class:`~repro.core.switching.CompileReport` end-to-end:
-each layer executes under the paradigm the switching system chose for it
-(serial -> event-driven gather path, parallel -> MXU matmul path), layer
-outputs cascade as the next layer's input spikes within a timestep.
+each projection executes under the paradigm the switching system chose
+for it (serial -> event-driven gather path, parallel -> MXU matmul path);
+within a timestep forward projections cascade in topological order and
+back-edges read one-step-delayed feedback.
 
-By default the whole mixed network runs as one fused jitted scan over
-timesteps (:class:`~repro.core.runtime.executor.NetworkExecutable`) with
-all lowered executables cached on the report — the lockstep pipeline real
-SpiNNaker2 hardware executes.  ``run_network_layerwise`` keeps the old
-mode — N independent per-layer scans with a host sync and a fresh
-lowering between layers — as the comparison baseline for tests and
-benchmarks.
+By default the whole mixed application graph runs as one fused jitted
+scan over timesteps
+(:class:`~repro.core.runtime.executor.NetworkExecutable`) with all
+lowered executables cached on the report — the lockstep pipeline real
+SpiNNaker2 hardware executes.  Two independent references back it:
+
+* ``run_network_layerwise`` — the old per-layer mode (N independent
+  scans with a host sync and a fresh lowering between layers); chains
+  only, the comparison baseline for tests and benchmarks.
+* ``run_graph_reference`` — the brute-force unrolled numpy oracle for
+  arbitrary graphs (recurrent edges included); shares no scan code with
+  the executor and anchors the differential harness.
 """
 from __future__ import annotations
 
@@ -25,7 +31,10 @@ from ..serial_compiler import SerialProgram
 from ..switching import CompileReport
 from .executor import network_executable
 from .parallel_runtime import run_parallel
+from .reference import run_graph_reference
 from .serial_runtime import run_serial
+
+__all__ = ["run_network", "run_network_layerwise", "run_graph_reference"]
 
 
 def run_network(
@@ -36,7 +45,7 @@ def run_network(
     interpret: bool | None = None,
     fused: bool = True,
 ) -> List[np.ndarray]:
-    """Returns the per-layer spike trains [(T, B, n_l) ...]."""
+    """Returns the per-projection spike trains [(T, B, n_l) ...]."""
     if len(report.layers) != len(net.layers):
         raise ValueError("report does not match network")
     if fused:
@@ -51,9 +60,19 @@ def run_network_layerwise(
     *,
     interpret: bool | None = None,
 ) -> List[np.ndarray]:
-    """Per-layer baseline: one scan + host round-trip + lowering per layer."""
+    """Per-layer baseline: one scan + host round-trip + lowering per layer.
+
+    Chains only — a graph with fan-in/fan-out or back-edges has no
+    per-layer cascade order; use the fused path or
+    :func:`run_graph_reference`.
+    """
     if len(report.layers) != len(net.layers):
         raise ValueError("report does not match network")
+    if not net.is_chain:
+        raise ValueError(
+            "run_network_layerwise supports feed-forward chains only; "
+            "run the fused executor or run_graph_reference for graphs"
+        )
     outs = []
     x = spikes
     for layer, compiled in zip(net.layers, report.layers):

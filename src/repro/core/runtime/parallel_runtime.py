@@ -90,18 +90,22 @@ def lower_parallel(
     )
 
 
-@partial(jax.jit, static_argnames=("alpha", "v_th", "interpret"))
-def parallel_step(
+@partial(jax.jit, static_argnames=("interpret",))
+def parallel_project(
     wdm_stack, col_source, col_delay,
     x_hist: jnp.ndarray,      # (max(1, D), S, B) int8 spike history ring
-    state: LIFState,          # .ring unused here (kept for API parity)
     x_t: jnp.ndarray,         # (B, S) f32 spikes at t
     t: jnp.ndarray,
     *,
-    alpha: float,
-    v_th: float,
     interpret: bool | None = None,
 ):
+    """Dominant-PE + MXU half of ONE projection.
+
+    Returns ``(x_hist', i_t)`` — the spike-history ring with ``x_t``
+    written in, and the ``(n_target, B)`` input current the target
+    population consumes at ``t``.  The LIF update lives with the
+    population so converging projections sum their currents first.
+    """
     # the allocated ring IS the truth for the depth (clamped >= 1 at
     # allocation via ring_depth), so the index arithmetic cannot drift
     d, n_source = x_hist.shape[0], x_hist.shape[1]
@@ -116,6 +120,24 @@ def parallel_step(
     ).astype(jnp.float32)                            # (T, B)
     # write x_t into the history ring AFTER the read (delays are >= 1)
     x_hist = x_hist.at[t % d].set(x_t.T.astype(jnp.int8))
+    return x_hist, i_t
+
+
+@partial(jax.jit, static_argnames=("alpha", "v_th", "interpret"))
+def parallel_step(
+    wdm_stack, col_source, col_delay,
+    x_hist: jnp.ndarray,      # (max(1, D), S, B) int8 spike history ring
+    state: LIFState,          # .ring unused here (kept for API parity)
+    x_t: jnp.ndarray,         # (B, S) f32 spikes at t
+    t: jnp.ndarray,
+    *,
+    alpha: float,
+    v_th: float,
+    interpret: bool | None = None,
+):
+    x_hist, i_t = parallel_project(
+        wdm_stack, col_source, col_delay, x_hist, x_t, t, interpret=interpret
+    )
     # fused LIF update operates (neurons, batch)
     v_new, z_new = lif_update(
         i_t, state.v.T, state.z.T, alpha=alpha, v_th=v_th, interpret=interpret

@@ -101,3 +101,79 @@ def run_reference(
 
     (_, _), zs = jax.lax.scan(step, (state, jnp.int32(0)), jnp.asarray(spikes, jnp.float32))
     return np.asarray(zs)
+
+
+def run_graph_reference(net, spikes: np.ndarray) -> list:
+    """Brute-force unrolled application-graph oracle — pure numpy, no scan.
+
+    Simulates an :class:`~repro.core.layer.SNNNetwork` graph (fan-in,
+    fan-out, self-loops, recurrent edges) with an explicit Python loop
+    over timesteps, dense per-delay weight tensors per projection, and
+    the same float32 arithmetic as the fused executor:
+
+    * forward projections see their source population's spikes from the
+      **current** timestep (within-step cascade in topological order);
+    * **back-edges** see the source's spikes from the **previous**
+      timestep (the one-step-delayed feedback path), so a back-edge spike
+      of synaptic delay ``d`` arrives ``d + 1`` steps after emission;
+    * a population sums the currents of all its in-projections before one
+      LIF update (``v' = i + alpha*v - z*v_th``; ``z' = v' >= v_th``).
+
+    All weights are int8-magnitude integers, so every accumulation is an
+    exact float32 integer and the result is **bit-identical** to the
+    compiled executor on every launch path — this is the differential
+    harness's ground truth for non-chain graphs (it shares no code with
+    the fused scan).  Returns per-projection trains ``[(T, B, n_post),
+    ...]`` — entry ``i`` is projection ``i``'s *target population* spike
+    train, matching :meth:`NetworkExecutable.run`.
+    """
+    spikes = np.asarray(spikes, np.float32)
+    T, B, n_in = spikes.shape
+    if n_in != net.n_input:
+        raise ValueError(
+            f"spikes must be (T, B, {net.n_input}); got {spikes.shape}"
+        )
+    idx = {p.name: i for i, p in enumerate(net.populations)}
+    sizes = [p.size for p in net.populations]
+    endpoints = net.endpoints
+    w_delay = [
+        delay_stacked_weights(e).astype(np.float32) for e in net.projections
+    ]
+    d_slots = [e.delay_range + 1 for e in net.projections]
+    rings = [
+        np.zeros((d_slots[i], B, e.n_target), np.float32)
+        for i, e in enumerate(net.projections)
+    ]
+    v = {p: np.zeros((B, sizes[p]), np.float32) for p in range(len(sizes))}
+    z = {p: np.zeros((B, sizes[p]), np.float32) for p in range(len(sizes))}
+    prev = [np.zeros((B, s), np.float32) for s in sizes]
+    pop_trains = [np.zeros((T, B, s), np.float32) for s in sizes]
+    for t in range(T):
+        cur = [None] * len(sizes)
+        cur[net.input_index] = spikes[t]
+        for p in net.topo_order:
+            if p == net.input_index:
+                continue
+            lif = net.population_lif(p)
+            alpha, v_th = np.float32(lif.alpha), np.float32(lif.v_th)
+            i_tot = np.zeros((B, sizes[p]), np.float32)
+            for ei in net.in_edges[p]:
+                e = net.projections[ei]
+                src = idx[endpoints[ei][0]]
+                x = prev[src] if ei in net.back_edges else cur[src]
+                # scatter to future ring slots: delay-d lands at t + d
+                contrib = np.einsum(
+                    "bs,dst->dbt", x, w_delay[ei]
+                ).astype(np.float32)
+                ring = rings[ei]
+                for d in range(e.delay_range):
+                    ring[(t + 1 + d) % d_slots[ei]] += contrib[d]
+                i_tot += ring[t % d_slots[ei]]
+                ring[t % d_slots[ei]] = 0.0
+            v[p] = i_tot + alpha * v[p] - z[p] * v_th
+            z[p] = (v[p] >= v_th).astype(np.float32)
+            cur[p] = z[p]
+        for p in range(len(sizes)):
+            pop_trains[p][t] = cur[p]
+        prev = cur
+    return [pop_trains[idx[post]] for _, post in endpoints]

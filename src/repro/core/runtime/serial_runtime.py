@@ -25,6 +25,14 @@ Two kernel *forms* implement that step:
   forms accumulate exactly in float32 and their spike trains are
   **bit-identical** — which form runs is purely a throughput decision
   (:class:`repro.core.cost_model.SerialBatchCostModel`).
+
+Each form is split into a *projection* half (:func:`serial_project` /
+:func:`serial_project_dense`: delay-ring scatter -> this step's input
+current) and the population-level LIF update, because in the application
+graph several projections can converge on one population — their currents
+sum before thresholding.  The ``serial_step*`` wrappers compose the two
+halves exactly as before, so single-projection (chain) execution is
+bit-identical to the pre-graph executor.
 """
 from __future__ import annotations
 
@@ -88,20 +96,27 @@ def lower_serial(program: SerialProgram, lif: LIFParams | None = None) -> Serial
 
 @partial(
     jax.jit,
-    static_argnames=("delay_range", "n_target", "alpha", "v_th", "interpret"),
+    static_argnames=("delay_range", "n_target", "interpret"),
 )
-def serial_step(
+def serial_project(
     exe_weight, exe_delay, exe_src, exe_tgt,
-    state: LIFState,
+    ring: jnp.ndarray,   # (d_slots, B, n_target) f32 future input currents
     x_t: jnp.ndarray,    # (B, S)
     t: jnp.ndarray,
     *,
     delay_range: int,
     n_target: int,
-    alpha: float,
-    v_th: float,
     interpret: bool | None = None,
 ):
+    """Event-form synaptic-current step of ONE projection.
+
+    Scatters this timestep's presynaptic spikes through the delay ring and
+    returns ``(ring', i_t)`` — the updated ring and the ``(B, n_target)``
+    input current the target population consumes at ``t``.  The neural
+    update lives with the *population* (:func:`repro.kernels.lif_update`),
+    so multiple projections converging on one population sum their
+    currents before thresholding.
+    """
     d_slots = delay_range + 1
     batch = x_t.shape[0]
     # event-driven gather: row fires iff its source spiked this timestep
@@ -118,9 +133,32 @@ def serial_step(
     updates = jax.ops.segment_sum(
         contrib.reshape(-1), seg_flat, num_segments=batch * d_slots * n_target
     )                                            # (B*slots*T,)
-    ring = state.ring + updates.reshape(-1, d_slots, n_target).transpose(1, 0, 2)
+    ring = ring + updates.reshape(-1, d_slots, n_target).transpose(1, 0, 2)
     i_t = ring[t % d_slots]
     ring = ring.at[t % d_slots].set(0.0)
+    return ring, i_t
+
+
+@partial(
+    jax.jit,
+    static_argnames=("delay_range", "n_target", "alpha", "v_th", "interpret"),
+)
+def serial_step(
+    exe_weight, exe_delay, exe_src, exe_tgt,
+    state: LIFState,
+    x_t: jnp.ndarray,    # (B, S)
+    t: jnp.ndarray,
+    *,
+    delay_range: int,
+    n_target: int,
+    alpha: float,
+    v_th: float,
+    interpret: bool | None = None,
+):
+    ring, i_t = serial_project(
+        exe_weight, exe_delay, exe_src, exe_tgt, state.ring, x_t, t,
+        delay_range=delay_range, n_target=n_target, interpret=interpret,
+    )
     # fused Pallas LIF update operates (neurons, batch)
     v_new, z_new = lif_update(
         i_t.T, state.v.T, state.z.T, alpha=alpha, v_th=v_th, interpret=interpret
@@ -151,6 +189,36 @@ def dense_serial_weights(exe: SerialExecutable) -> np.ndarray:
 
 @partial(
     jax.jit,
+    static_argnames=("delay_range", "n_target", "interpret"),
+)
+def serial_project_dense(
+    w_dense,             # (d_slots, S, T) f32 per-delay-slot weights
+    ring: jnp.ndarray,   # (d_slots, B, n_target) f32 future input currents
+    x_t: jnp.ndarray,    # (B, S)
+    t: jnp.ndarray,
+    *,
+    delay_range: int,
+    n_target: int,
+    interpret: bool | None = None,
+):
+    """Dense-fallback synaptic-current step — same ring, same currents.
+
+    ``upd[d] = x_t @ W[d]`` is the total delay-``d`` contribution; rolling
+    by ``t`` lands it in ring slot ``(t + d) % d_slots``, exactly where the
+    event form's segment ids point.  Delay-0 weights are structurally zero,
+    so the current slot is read before anything lands in it — the same
+    delays >= 1 ordering the event form relies on.
+    """
+    d_slots = delay_range + 1
+    upd = jnp.einsum("bs,dst->dbt", x_t, w_dense)    # (d_slots, B, T)
+    ring = ring + jnp.roll(upd, t, axis=0)
+    i_t = ring[t % d_slots]
+    ring = ring.at[t % d_slots].set(0.0)
+    return ring, i_t
+
+
+@partial(
+    jax.jit,
     static_argnames=("delay_range", "n_target", "alpha", "v_th", "interpret"),
 )
 def serial_step_dense(
@@ -165,19 +233,11 @@ def serial_step_dense(
     v_th: float,
     interpret: bool | None = None,
 ):
-    """Dense-fallback serial step — same carry, same outputs, all matmul.
-
-    ``upd[d] = x_t @ W[d]`` is the total delay-``d`` contribution; rolling
-    by ``t`` lands it in ring slot ``(t + d) % d_slots``, exactly where the
-    event form's segment ids point.  Delay-0 weights are structurally zero,
-    so the current slot is read before anything lands in it — the same
-    delays >= 1 ordering the event form relies on.
-    """
-    d_slots = delay_range + 1
-    upd = jnp.einsum("bs,dst->dbt", x_t, w_dense)    # (d_slots, B, T)
-    ring = state.ring + jnp.roll(upd, t, axis=0)
-    i_t = ring[t % d_slots]
-    ring = ring.at[t % d_slots].set(0.0)
+    """Dense-fallback serial step — same carry, same outputs, all matmul."""
+    ring, i_t = serial_project_dense(
+        w_dense, state.ring, x_t, t,
+        delay_range=delay_range, n_target=n_target, interpret=interpret,
+    )
     # fused Pallas LIF update operates (neurons, batch)
     v_new, z_new = lif_update(
         i_t.T, state.v.T, state.z.T, alpha=alpha, v_th=v_th, interpret=interpret

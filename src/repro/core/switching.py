@@ -9,6 +9,12 @@ Policies:
   the winning paradigm from the 4 layer characters BEFORE compiling, so only
   one compilation runs per layer (layer-granularity switching, Fig 2).
 
+Compilation is **per projection**: the layer character is a property of one
+projection (edge of the application graph), so arbitrary graphs — fan-in,
+skip connections, recurrent back-edges — compile through the exact same
+prejudging flow as feed-forward chains, one ``CompiledLayer`` per
+projection in declaration order.
+
 ``CompileReport`` tracks the two costs the paper optimizes on the host —
 number of paradigm compilations and peak host RAM holding compiled
 artifacts — plus the PE occupation on SpiNNaker2.
@@ -166,6 +172,12 @@ class SwitchingCompiler:
 
     # -- whole network -------------------------------------------------------
     def compile_network(self, net: SNNNetwork) -> CompileReport:
+        """One ``CompiledLayer`` per projection, in declaration order.
+
+        Works for chains and arbitrary application graphs alike —
+        prejudging only reads the per-projection character, never the
+        topology.
+        """
         return CompileReport([self.compile_layer(l) for l in net.layers])
 
 

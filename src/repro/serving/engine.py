@@ -79,10 +79,17 @@ class ServingEngine:
     """Batched SNN inference serving over one or more compiled models.
 
     The constructor registers ``net``/``report`` as the ``"default"``
-    model; :meth:`register_model` adds more.  ``max_models`` caps how
+    model; :meth:`register_model` adds more.  Models may be arbitrary
+    application graphs (recurrent edges included) — the engine only
+    needs each model's input-population width.  ``max_models`` caps how
     many models keep live (lowered + jitted) executables — beyond it the
     least-recently-used model is evicted and revives cold on its next
     request (see :class:`~repro.serving.pool.ExecutablePool`).
+    ``max_wait_ms`` bounds how long a request may sit in an under-full
+    continuous-mode bucket before the scheduler launches it partial (the
+    age-out; ``None`` launches partial buckets immediately; members with
+    deadlines tighter than the hold escape it immediately).  Age-out
+    launches are counted in ``stats()['ageout_launches']``.
     """
 
     def __init__(
@@ -97,12 +104,14 @@ class ServingEngine:
         max_models: Optional[int] = None,
         interpret: bool | None = None,
         full_bucket_path: str = "batched",
+        max_wait_ms: Optional[float] = None,
     ):
         self.queue = RequestQueue(max_pending=max_pending)
         self.scheduler = ShapeBucketingScheduler(
-            net.layers[0].n_source,
+            net.n_input,
             micro_batch=micro_batch,
             min_bucket_steps=min_bucket_steps,
+            max_wait_ms=max_wait_ms,
         )
         self.pool = ExecutablePool(
             interpret=interpret, max_models=max_models,
@@ -133,7 +142,7 @@ class ServingEngine:
         model's.  ``warm_steps`` optionally pre-compiles the buckets its
         expected traffic lands in (same semantics as :meth:`warmup`).
         """
-        self.scheduler.set_model_input(name, net.layers[0].n_source)
+        self.scheduler.set_model_input(name, net.n_input)
         entry = self.pool.register(net, report, name)
         if warm_steps:
             self.warmup(warm_steps, model=name)
@@ -217,7 +226,9 @@ class ServingEngine:
         # padded scans), then launch everything admitted
         self._admit_pending(served)
         while True:
-            mb = self.scheduler.pop_launchable()
+            # a full drain flushes even buckets still inside their
+            # max_wait_ms age-out budget
+            mb = self.scheduler.pop_launchable(force=True)
             if mb is None:
                 break
             served.update(self._run_microbatch(mb))
@@ -289,6 +300,8 @@ class ServingEngine:
             pass
 
     def _run_microbatch(self, mb: MicroBatch) -> Dict[int, RequestResult]:
+        if mb.aged_out:
+            self.metrics.record_ageout()
         t_dispatch = time.perf_counter()
         # the pool routes by occupancy: full buckets take its configured
         # full_bucket_path (vmapped request-axis by default), partial
@@ -361,10 +374,15 @@ class ServingEngine:
                     await asyncio.sleep(poll_interval)
                     continue
                 if mode == "continuous":
-                    self.step_continuous()
+                    served = self.step_continuous()
                 else:
-                    self.drain()
-                await asyncio.sleep(0)      # yield to submitters
+                    served = self.drain()
+                if not served and self.queue.empty():
+                    # open buckets are all inside their age-out budget;
+                    # idle until the clock (or a new arrival) unblocks one
+                    await asyncio.sleep(poll_interval)
+                else:
+                    await asyncio.sleep(0)  # yield to submitters
         finally:
             self._running = False
 

@@ -78,12 +78,19 @@ class ServingMetrics:
         self.total_requests = 0
         self.total_request_steps = 0
         self.total_shed = 0
+        #: Launches of under-full buckets forced by the scheduler's
+        #: partial-bucket age-out (``max_wait_ms``) — how often padding
+        #: waste was spent to bound queue wait.
+        self.total_ageout_launches = 0
 
     def record_batch(self, records: List[RequestRecord]) -> None:
         self.batches_dispatched += 1
         self.total_requests += len(records)
         self.total_request_steps += sum(r.steps for r in records)
         self.records.extend(records)
+
+    def record_ageout(self) -> None:
+        self.total_ageout_launches += 1
 
     def record_shed(self, record: ShedRecord) -> None:
         self.total_shed += 1
@@ -153,7 +160,7 @@ class ServingMetrics:
     ) -> Dict:
         """One flat summary dict of everything above.
 
-        Keys: ``requests``, ``shed``, ``batches``,
+        Keys: ``requests``, ``shed``, ``batches``, ``ageout_launches``,
         ``mean_batch_occupancy``, ``mean_queue_wait_ms``, ``p50_ms`` /
         ``p95_ms`` / ``max_ms`` (overall), ``latency_by_priority``
         (per-class percentiles), ``deadline_miss_rate`` (None when no
@@ -166,6 +173,7 @@ class ServingMetrics:
             "requests": self.n_requests,
             "shed": self.total_shed,
             "batches": self.batches_dispatched,
+            "ageout_launches": self.total_ageout_launches,
             "mean_batch_occupancy": (
                 float(np.mean([r.batch_occupancy for r in self.records]))
                 if self.records else 0.0

@@ -84,7 +84,7 @@ class PoolEntry:
 
     @property
     def n_input(self) -> int:
-        return self.net.layers[0].n_source
+        return self.net.n_input
 
 
 class ExecutablePool:

@@ -26,6 +26,13 @@ Two batching modes share this policy:
   request never waits for a full drain wave — at most one launch
   separates its arrival from its admission.
 
+With ``max_wait_ms`` set, an under-full bucket is **held open** (not
+launchable) until either it fills or its oldest member has waited
+``max_wait_ms`` — the partial-bucket age-out: padding waste is spent only
+when the wait budget is exhausted.  ``max_wait_ms=None`` (default)
+preserves the launch-immediately behavior.  Age-out launches are flagged
+on the :class:`MicroBatch` and counted by ``ServingMetrics``.
+
 Padded timesteps and empty slots are made *inert* (exact-zero outputs,
 bit-identical live prefix) by the executor's step-count mask
 (:meth:`repro.core.runtime.NetworkExecutable.run_device`).
@@ -33,6 +40,7 @@ bit-identical live prefix) by the executor's step-count mask
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -67,6 +75,9 @@ class MicroBatch:
     spikes: np.ndarray                     # key.shape f32, zero-padded
     valid_steps: np.ndarray                # (key.batch,) i32; 0 = empty slot
     model: str = DEFAULT_MODEL             # routing key into the pool
+    #: True when this launch was forced by the partial-bucket age-out
+    #: (oldest member waited ``max_wait_ms`` before the bucket filled).
+    aged_out: bool = False
 
     @property
     def real_request_steps(self) -> int:
@@ -88,6 +99,10 @@ class OpenBucket:
     @property
     def free_slots(self) -> int:
         return self.key.batch - len(self.requests)
+
+    def oldest_enqueue(self) -> float:
+        """Enqueue stamp of the longest-waiting member (age-out clock)."""
+        return min(r.t_enqueue for r in self.requests)
 
     def urgency(self):
         """Launch-order key: most urgent member decides for the bucket.
@@ -126,12 +141,20 @@ class ShapeBucketingScheduler:
         *,
         micro_batch: int = 8,
         min_bucket_steps: int = 8,
+        max_wait_ms: Optional[float] = None,
     ):
         if micro_batch < 1 or min_bucket_steps < 1:
             raise ValueError("micro_batch and min_bucket_steps must be >= 1")
+        if max_wait_ms is not None and max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0; got {max_wait_ms}")
         self.n_input = n_input
         self.micro_batch = micro_batch
         self.min_bucket_steps = min_bucket_steps
+        #: Partial-bucket age-out budget: an under-full open bucket only
+        #: becomes launchable once its oldest request has waited this long
+        #: (``None`` = launch partial buckets immediately, the pre-age-out
+        #: behavior).  Full buckets always launch.
+        self.max_wait_ms = max_wait_ms
         self._model_inputs: Dict[str, int] = {DEFAULT_MODEL: n_input}
         #: Open in-flight buckets, keyed (model, BucketKey) — the
         #: continuous-batching admission state.
@@ -205,16 +228,50 @@ class ShapeBucketingScheduler:
             self._full.append(self._open.pop((request.model, key)))
         return bucket
 
-    def pop_launchable(self) -> Optional[MicroBatch]:
-        """Close and pad the most urgent admitted bucket; None when idle.
+    def _aged(self, bucket: OpenBucket, now: float) -> bool:
+        return (
+            self.max_wait_ms is not None
+            and (now - bucket.oldest_enqueue()) * 1e3 >= self.max_wait_ms
+        )
+
+    def _launchable(self, bucket: OpenBucket, now: float) -> bool:
+        """Full, aged out, or holding a member whose deadline cannot
+        survive the hold.
+
+        A member whose ``deadline_at`` lands before the bucket's age-out
+        instant must not wait out the budget — holding it guarantees the
+        miss the deadline machinery exists to avoid, so its bucket is
+        launchable immediately (the EDF urgency key then orders it).
+        """
+        if bucket.free_slots == 0 or self._aged(bucket, now):
+            return True
+        ageout_at = bucket.oldest_enqueue() + self.max_wait_ms / 1e3
+        return any(r.deadline_at <= ageout_at for r in bucket.requests)
+
+    def pop_launchable(
+        self, now: Optional[float] = None, *, force: bool = False
+    ) -> Optional[MicroBatch]:
+        """Close and pad the most urgent *launchable* bucket; None when idle.
 
         Full buckets launch first (occupancy is throughput — see
         :meth:`OpenBucket.urgency` for why this beats priority
         preemption even for the urgent class), then the partial bucket
         whose most urgent member has the highest priority / earliest
         deadline / oldest arrival.
+
+        With ``max_wait_ms`` set, a partial bucket is only launchable
+        once its oldest member has waited that long (the age-out); until
+        then it stays open, accumulating admissions.  Two escapes bound
+        the hold: a member whose deadline lands before the bucket's
+        age-out instant makes it launchable immediately (holding would
+        guarantee the miss), and ``force=True`` ignores the wait budget
+        entirely — the wave-mode ``drain()`` flush, which must empty the
+        backlog.  An age-out launch is flagged ``MicroBatch.aged_out``.
         """
+        now = time.perf_counter() if now is None else now
         candidates = [*self._full, *self._open.values()]
+        if self.max_wait_ms is not None and not force:
+            candidates = [b for b in candidates if self._launchable(b, now)]
         if not candidates:
             return None
         bucket = min(candidates, key=OpenBucket.urgency)
@@ -222,7 +279,9 @@ class ShapeBucketingScheduler:
             self._full = [b for b in self._full if b is not bucket]
         else:
             self._open.pop((bucket.model, bucket.key))
-        return self._pad(bucket.key, bucket.requests, bucket.model)
+        mb = self._pad(bucket.key, bucket.requests, bucket.model)
+        mb.aged_out = bucket.free_slots > 0 and self._aged(bucket, now)
+        return mb
 
     def open_requests(self) -> int:
         """Requests currently admitted but not yet launched."""

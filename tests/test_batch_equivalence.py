@@ -263,3 +263,165 @@ def test_cost_model_crossover_monotonicity():
             assert cm.prefer_dense(rows, 100, 100, 8, int(np.ceil(x)) + 1)
         if x >= 2:
             assert not cm.prefer_dense(rows, 100, 100, 8, int(x // 2))
+
+
+# -- application-graph IR: graph-as-chain and recurrent equivalence -----------
+#
+# The graph refactor's two acceptance properties, on the same five launch
+# paths as the chain harness:
+#
+#   * a feed-forward chain expressed through the graph API is
+#     bit-identical to the chain-constructor path (same weights, same
+#     programs, same spike trains on every path);
+#   * a recurrent graph (self-loops + projections onto earlier
+#     populations) matches the brute-force unrolled numpy reference
+#     (`run_graph_reference`) exactly — integer accumulation, no atol.
+
+from repro.core import Population, Projection, random_projection
+from repro.core.runtime import run_graph_reference
+
+#: Recurrent geometries under test: (populations, projection specs, forced
+#: paradigms, seed).  Projection spec: (pre, post, density, delay_range).
+GRAPHS = {
+    "self-loop": (
+        [("in", 14), ("h", 18), ("out", 9)],
+        [("in", "h", 0.4, 2), ("h", "h", 0.3, 3), ("h", "out", 0.5, 2)],
+        ["serial", "parallel", "serial"],
+        606,
+    ),
+    "long-back-edge": (
+        [("in", 12), ("a", 16), ("b", 13), ("out", 8)],
+        [("in", "a", 0.4, 2), ("a", "b", 0.4, 1), ("b", "a", 0.35, 2),
+         ("b", "out", 0.5, 3)],
+        ["parallel", "serial", "parallel", "serial"],
+        707,
+    ),
+    "skip-and-loop": (
+        [("in", 15), ("h1", 14), ("h2", 12), ("out", 7)],
+        [("in", "h1", 0.4, 2), ("h1", "h2", 0.4, 2), ("in", "h2", 0.3, 1),
+         ("h2", "h2", 0.3, 2), ("h2", "out", 0.5, 2), ("out", "h1", 0.3, 1)],
+        ["serial", "parallel", "serial", "parallel", "serial", "parallel"],
+        808,
+    ),
+}
+
+_GRAPH_CACHE = {}
+
+
+def _graph_net_for(graph_name):
+    if graph_name in _GRAPH_CACHE:
+        return _GRAPH_CACHE[graph_name]
+    pop_spec, proj_spec, paradigms, seed = GRAPHS[graph_name]
+    rng = np.random.default_rng(seed)
+    pops = {name: Population(name, size) for name, size in pop_spec}
+    projs = []
+    for pre, post, density, delay_range in proj_spec:
+        p = random_projection(
+            pops[pre], pops[post], density, delay_range,
+            seed=int(rng.integers(0, 2**31)),
+            delay_granularity=rng.choice(["source", "synapse"]),
+        )
+        p.lif = LIF
+        projs.append(p)
+    net = SNNNetwork(
+        populations=list(pops.values()), projections=projs, name=graph_name,
+    )
+    assert net.back_edges, graph_name      # every geometry is recurrent
+    report = CompileReport(layers=[
+        SwitchingCompiler(p).compile_layer(l)
+        for p, l in zip(paradigms, net.layers)
+    ])
+    exe = network_executable(net, report)
+    batch = 4
+    n_in = net.n_input
+    spikes = (rng.random((12, batch, n_in)) < 0.3).astype(np.float32)
+    valid = np.asarray(
+        [12, int(rng.integers(1, 12)), int(rng.integers(1, 12)), 0],
+        np.int32,
+    )
+    want = _solo_graph_reference(net, spikes, valid)
+    _GRAPH_CACHE[graph_name] = (net, report, exe, spikes, valid, want)
+    return _GRAPH_CACHE[graph_name]
+
+
+def _solo_graph_reference(net, spikes, valid):
+    """Each live request alone through the brute-force unrolled numpy
+    oracle, trimmed to its true length — the recurrent ground truth
+    (shares no scan code with the fused executor)."""
+    outs = [
+        np.zeros(spikes.shape[:2] + (l.n_target,), np.float32)
+        for l in net.layers
+    ]
+    for b in range(spikes.shape[1]):
+        n = int(valid[b])
+        if n == 0:
+            continue
+        solo = run_graph_reference(net, spikes[:n, b : b + 1])
+        for dst, z in zip(outs, solo):
+            dst[:n, b] = z[:, 0]
+    return outs
+
+
+@pytest.mark.parametrize("path", PATHS + ["solo"])
+@pytest.mark.parametrize("graph", sorted(GRAPHS))
+def test_recurrent_graph_equals_unrolled_reference(graph, path):
+    """Every (recurrent geometry x launch path) is bit-identical to the
+    brute-force unrolled reference, masked slots included."""
+    net, report, exe, spikes, valid, want = _graph_net_for(graph)
+    if path == "solo":
+        # the solo loop has no masking; compare per-request prefixes
+        got = _launch(exe, "solo", spikes, None)
+        full = run_graph_reference(net, spikes)
+        for a, b in zip(got, full):
+            np.testing.assert_array_equal(a, b)
+        return
+    got = _launch(exe, path, spikes, valid)
+    assert len(got) == len(net.layers)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+def _clone_as_projection(layer, pre, post):
+    return Projection(
+        weights=layer.weights.copy(), delays=layer.delays.copy(),
+        delay_range=layer.delay_range, lif=layer.lif, name=layer.name,
+        pre=pre, post=post,
+    )
+
+
+@pytest.mark.parametrize("mix", sorted(MIXES))
+def test_graph_as_chain_bit_identical_to_chain(mix):
+    """A feed-forward chain built through the graph API (explicit
+    populations + projections) produces bit-identical spike trains to the
+    chain-constructor path on all five launch paths."""
+    net, report, exe, spikes, valid, want = _net_for(mix)
+    pops = [
+        Population(f"g{mix}.p{i}", s) for i, s in enumerate(net.layer_sizes)
+    ]
+    projs = [
+        _clone_as_projection(l, pops[i].name, pops[i + 1].name)
+        for i, l in enumerate(net.layers)
+    ]
+    gnet = SNNNetwork(populations=pops, projections=projs, name=f"g-{mix}")
+    assert gnet.is_chain and not gnet.back_edges
+    paradigms = [c.paradigm for c in report.layers]
+    greport = CompileReport(layers=[
+        SwitchingCompiler(p).compile_layer(l)
+        for p, l in zip(paradigms, gnet.layers)
+    ])
+    gexe = network_executable(gnet, greport)
+    for path in PATHS + ["solo"]:
+        got = _launch(gexe, path, spikes, None if path == "solo" else valid)
+        base = _launch(exe, path, spikes, None if path == "solo" else valid)
+        for a, b in zip(got, base):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_graph_reference_matches_layerwise_on_chains():
+    """The unrolled graph oracle agrees with the per-layer reference on a
+    plain chain — the two independent references corroborate."""
+    net, report, exe, spikes, _, _ = _net_for("serial-first")
+    a = run_graph_reference(net, spikes)
+    b = run_network_layerwise(net, report, spikes)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

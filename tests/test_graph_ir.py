@@ -1,0 +1,309 @@
+"""Application-graph IR: construction, validation, topology, semantics.
+
+Covers the graph data model itself (`core/layer.py`): chain synthesis,
+topological ordering with declared-order tie-breaking, back-edge
+classification (self-loops + projections onto earlier populations),
+input-population identification, effective per-population LIF
+resolution, and the compile-only bag-of-layers compatibility mode.  The
+one-step-delayed back-edge timing contract is pinned on a hand-computable
+two-neuron network.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Population,
+    Projection,
+    SwitchingCompiler,
+    random_layer,
+    random_projection,
+)
+from repro.core.layer import LIFParams, SNNNetwork
+from repro.core.runtime import (
+    network_executable,
+    run_graph_reference,
+    run_network_layerwise,
+)
+from repro.core.switching import CompileReport
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+
+def _pops(*spec):
+    return [Population(name, size) for name, size in spec]
+
+
+def _proj(pre, post, *, seed=0, density=0.5, delay_range=2, lif=LIF):
+    p = random_projection(pre, post, density, delay_range, seed=seed)
+    p.lif = lif
+    return p
+
+
+# -- chain compatibility ------------------------------------------------------
+
+def test_chain_constructor_synthesizes_graph():
+    layers = [
+        random_layer(10, 8, 0.5, 2, seed=0),
+        random_layer(8, 6, 0.5, 2, seed=1),
+    ]
+    net = SNNNetwork(layers=layers, name="c")
+    assert [p.size for p in net.populations] == [10, 8, 6]
+    assert net.topo_order == (0, 1, 2)
+    assert not net.back_edges
+    assert net.input_index == 0
+    assert net.n_input == 10
+    assert net.is_chain
+    assert net.layers is net.projections
+    names = [p.name for p in net.populations]
+    assert net.endpoints == (
+        (names[0], names[1]), (names[1], names[2]),
+    )
+    # the chain builder never mutates the caller's layer objects
+    assert layers[0].pre is None and layers[1].post is None
+    assert net.in_edges == ((), (0,), (1,))
+
+
+def test_chain_layers_shared_between_networks_stay_uncorrupted():
+    """Two networks built from the SAME layer objects are independent:
+    chain endpoints live on the network, not on the layers."""
+    layers = [
+        random_layer(10, 8, 0.5, 2, seed=0),
+        random_layer(8, 6, 0.5, 2, seed=1),
+    ]
+    n1 = SNNNetwork(layers=layers, name="a")
+    n2 = SNNNetwork(layers=layers, name="b")
+    assert n2.topo_order == (0, 1, 2)       # build b's graph first
+    assert n1.topo_order == (0, 1, 2)       # a's graph still resolves
+    assert n1.endpoints[0][0] == "a.p0"
+    assert n2.endpoints[0][0] == "b.p0"
+    spikes = np.zeros((3, 1, 10), np.float32)
+    r1 = run_graph_reference(n1, spikes)
+    r2 = run_graph_reference(n2, spikes)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_bag_of_layers_stays_compileable():
+    """Pre-graph usage: unrelated layers compiled for PE accounting only.
+    Graph queries on such a net fail lazily with a clear error."""
+    layers = [
+        random_layer(10, 8, 0.5, 2, seed=0),
+        random_layer(30, 7, 0.5, 2, seed=1),     # does not chain up
+    ]
+    net = SNNNetwork(layers=layers)
+    assert len(net.layers) == 2                  # no eager validation
+    assert len(net.characters()) == 2
+    report = SwitchingCompiler("serial").compile_network(net)
+    assert report.total_pes > 0
+    with pytest.raises(ValueError, match="chain shape mismatch"):
+        net.topo_order
+
+
+# -- graph construction + validation ------------------------------------------
+
+def test_graph_validates_endpoints_and_shapes():
+    a, b = _pops(("a", 10), ("b", 8))
+    good = _proj(a, b, seed=0)
+    with pytest.raises(ValueError, match="unknown population"):
+        SNNNetwork(
+            populations=[a, b],
+            projections=[Projection(
+                weights=good.weights, delays=good.delays,
+                delay_range=good.delay_range, pre="a", post="nope",
+            )],
+        )
+    with pytest.raises(ValueError, match="n_source"):
+        SNNNetwork(
+            populations=[Population("a", 11), b], projections=[good],
+        )
+    with pytest.raises(ValueError, match="duplicate population"):
+        SNNNetwork(populations=[a, a], projections=[good])
+    with pytest.raises(ValueError, match="needs pre= and post="):
+        Projection(
+            weights=good.weights, delays=good.delays,
+            delay_range=good.delay_range,
+        )
+
+
+def test_graph_requires_exactly_one_input_population():
+    a, b, c = _pops(("a", 6), ("b", 6), ("c", 6))
+    # two inputs: a and b both have no in-edges
+    with pytest.raises(ValueError, match="exactly one population"):
+        SNNNetwork(
+            populations=[a, b, c],
+            projections=[_proj(a, c, seed=0), _proj(b, c, seed=1)],
+        )
+    # no input: every population has an in-edge (2-cycle + driven c)
+    with pytest.raises(ValueError, match="exactly one population"):
+        SNNNetwork(
+            populations=[a, b, c],
+            projections=[
+                _proj(a, b, seed=0), _proj(b, a, seed=1), _proj(b, c, seed=2),
+            ],
+        )
+
+
+def test_topological_order_ignores_declaration_order():
+    """A DAG declared out of order is still sorted topologically; forward
+    edges never count as back-edges."""
+    inp, hid, out = _pops(("in", 6), ("hid", 5), ("out", 4))
+    net = SNNNetwork(
+        populations=[out, inp, hid],       # deliberately scrambled
+        projections=[_proj(inp, hid, seed=0), _proj(hid, out, seed=1)],
+    )
+    names = [net.populations[i].name for i in net.topo_order]
+    assert names == ["in", "hid", "out"]
+    assert not net.back_edges
+    assert net.input_population.name == "in"
+
+
+def test_cycle_break_ignores_populations_downstream_of_the_cycle():
+    """A population merely fed BY a cycle is never picked when breaking
+    it, whatever its declaration position: only the genuinely cyclic
+    edge becomes a back-edge."""
+    inp, a, b, c = _pops(("in", 6), ("a", 5), ("b", 5), ("c", 4))
+    projections = [
+        _proj(inp, a, seed=0),        # in -> a
+        _proj(a, b, seed=1),          # a -> b   (cycle with b -> a)
+        _proj(b, a, seed=2),          # b -> a
+        _proj(b, c, seed=3),          # plain forward edge OUT of the cycle
+    ]
+    for decl, want_back in (
+        ([inp, a, b, c], {2}),      # a earliest in the cycle: b->a back
+        ([inp, c, a, b], {2}),      # c's position is irrelevant
+        ([c, inp, b, a], {1}),      # b earliest in the cycle: a->b back
+    ):
+        net = SNNNetwork(populations=list(decl), projections=projections)
+        pos = {net.populations[i].name: k
+               for k, i in enumerate(net.topo_order)}
+        # exactly ONE cycle edge breaks; b -> c is never reclassified
+        assert net.back_edges == frozenset(want_back), decl
+        assert pos["b"] < pos["c"], decl      # b -> c stays forward
+
+
+def test_back_edge_classification():
+    inp, a, b = _pops(("in", 6), ("a", 5), ("b", 4))
+    net = SNNNetwork(
+        populations=[inp, a, b],
+        projections=[
+            _proj(inp, a, seed=0),       # forward
+            _proj(a, a, seed=1),         # self-loop -> back
+            _proj(a, b, seed=2),         # forward
+            _proj(b, a, seed=3),         # onto earlier population -> back
+            _proj(inp, b, seed=4),       # skip connection -> forward
+        ],
+    )
+    assert net.back_edges == frozenset({1, 3})
+    assert net.topo_order == (0, 1, 2)
+    assert not net.is_chain
+    assert net.in_edges[1] == (0, 1, 3)   # fan-in onto a, declaration order
+
+
+def test_population_lif_resolution():
+    inp, a = _pops(("in", 6), ("a", 5))
+    other = LIFParams(alpha=0.25, v_th=32.0)
+    p1, p2 = _proj(inp, a, seed=0), _proj(a, a, seed=1, lif=other)
+    net = SNNNetwork(populations=[inp, a], projections=[p1, p2])
+    with pytest.raises(ValueError, match="differing"):
+        net.population_lif(1)
+    # explicit Population.lif resolves the ambiguity
+    net2 = SNNNetwork(
+        populations=[inp, Population("a", 5, lif=LIF)],
+        projections=[p1, p2],
+    )
+    assert net2.population_lif(1) == LIF
+    # unanimous in-edges need no override
+    p3 = _proj(a, a, seed=1)
+    net3 = SNNNetwork(populations=[inp, a], projections=[p1, p3])
+    assert net3.population_lif(1) == LIF
+
+
+def test_random_projection_shapes_and_names():
+    a, b = _pops(("src", 7), ("dst", 9))
+    p = random_projection(a, b, 0.5, 3, seed=5)
+    assert (p.n_source, p.n_target) == (7, 9)
+    assert (p.pre, p.post) == ("src", "dst")
+    assert p.name == "src->dst"
+
+
+# -- runtime semantics --------------------------------------------------------
+
+def test_back_edge_is_one_step_delayed_hand_computed():
+    """A self-loop spike of synaptic delay d re-arrives d+1 steps later.
+
+    in(1) --w=64,d=1--> a(1) with a --w=64,d=1--> a (self-loop), alpha=0,
+    v_th=64: the input spike at t=0 fires `a` at t=1; each self-loop spike
+    re-fires `a` two steps later (1 feedback + 1 synaptic delay).
+    """
+    lif = LIFParams(alpha=0.0, v_th=64.0)
+    inp, a = Population("in", 1), Population("a", 1)
+    w = np.array([[64.0]])
+    d = np.array([[1]])
+    fwd = Projection(weights=w, delays=d, delay_range=1, lif=lif,
+                     pre="in", post="a", name="fwd")
+    loop = Projection(weights=w.copy(), delays=d.copy(), delay_range=1,
+                      lif=lif, pre="a", post="a", name="loop")
+    net = SNNNetwork(populations=[inp, a], projections=[fwd, loop])
+    assert net.back_edges == frozenset({1})
+    T = 10
+    spikes = np.zeros((T, 1, 1), np.float32)
+    spikes[0, 0, 0] = 1.0
+    want = np.zeros(T, np.float32)
+    want[1::2] = 1.0                      # t = 1, 3, 5, ...
+    ref = run_graph_reference(net, spikes)
+    np.testing.assert_array_equal(ref[0][:, 0, 0], want)
+    report = CompileReport(layers=[
+        SwitchingCompiler("serial").compile_layer(fwd),
+        SwitchingCompiler("parallel").compile_layer(loop),
+    ])
+    out = network_executable(net, report).run(spikes)
+    np.testing.assert_array_equal(out[0][:, 0, 0], want)
+    np.testing.assert_array_equal(out[1][:, 0, 0], want)
+
+
+def test_fan_in_sums_currents_before_threshold():
+    """Two projections converging on one population integrate into ONE
+    membrane: weights 32+32 reach v_th=64 where either alone would not."""
+    lif = LIFParams(alpha=0.0, v_th=64.0)
+    i1, h, o = Population("in", 1), Population("h", 2), Population("o", 1)
+    # in -> h fans out (both h neurons fire), then h's two neurons project
+    # 32 each onto o — only their SUM crosses threshold
+    fwd = Projection(
+        weights=np.array([[64.0, 64.0]]), delays=np.ones((1, 2), int),
+        delay_range=1, lif=lif, pre="in", post="h",
+    )
+    half_a = Projection(
+        weights=np.array([[32.0], [0.0]]), delays=np.ones((2, 1), int),
+        delay_range=1, lif=lif, pre="h", post="o", name="ha",
+    )
+    half_b = Projection(
+        weights=np.array([[0.0], [32.0]]), delays=np.ones((2, 1), int),
+        delay_range=1, lif=lif, pre="h", post="o", name="hb",
+    )
+    net = SNNNetwork(populations=[i1, h, o], projections=[fwd, half_a, half_b])
+    spikes = np.zeros((5, 1, 1), np.float32)
+    spikes[0] = 1.0
+    ref = run_graph_reference(net, spikes)
+    assert ref[1][2, 0, 0] == 1.0         # o fires only from the sum
+    report = CompileReport(layers=[
+        SwitchingCompiler(p).compile_layer(l)
+        for p, l in zip(("parallel", "serial", "parallel"), net.layers)
+    ])
+    out = network_executable(net, report).run(spikes)
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_layerwise_runner_rejects_graphs():
+    inp, a = _pops(("in", 6), ("a", 5))
+    net = SNNNetwork(
+        populations=[inp, a],
+        projections=[_proj(inp, a, seed=0), _proj(a, a, seed=1)],
+    )
+    report = CompileReport(layers=[
+        SwitchingCompiler("serial").compile_layer(l) for l in net.layers
+    ])
+    with pytest.raises(ValueError, match="chains only"):
+        run_network_layerwise(
+            net, report, np.zeros((3, 1, 6), np.float32)
+        )

@@ -470,3 +470,119 @@ def test_serve_forever_continuous_mixed_priorities():
         for a, b in zip(got, solo_run(net, report, sp)):
             np.testing.assert_array_equal(a, b)
     assert engine.stats()["requests"] == len(requests)
+
+
+# -- partial-bucket age-out ---------------------------------------------------
+
+def test_ageout_holds_partial_bucket_until_max_wait():
+    """With max_wait_ms set, an under-full bucket is not launchable until
+    its oldest member has waited the budget; then it launches flagged."""
+    s = ShapeBucketingScheduler(
+        8, micro_batch=4, min_bucket_steps=4, max_wait_ms=50.0
+    )
+    q = RequestQueue()
+    r1 = q.submit(np.ones((3, 8), np.float32))
+    s.admit(r1)
+    t0 = r1.t_enqueue
+    # inside the wait budget: held open
+    assert s.pop_launchable(now=t0 + 0.010) is None
+    assert s.open_requests() == 1
+    # budget exhausted: launches partial, flagged as an age-out
+    mb = s.pop_launchable(now=t0 + 0.060)
+    assert mb is not None and mb.aged_out
+    assert [r.request_id for r in mb.requests] == [r1.request_id]
+    assert s.open_requests() == 0
+
+
+def test_ageout_full_buckets_launch_immediately_and_unflagged():
+    s = ShapeBucketingScheduler(
+        8, micro_batch=2, min_bucket_steps=4, max_wait_ms=10_000.0
+    )
+    q = RequestQueue()
+    r1, r2 = (q.submit(np.ones((3, 8), np.float32)) for _ in range(2))
+    s.admit(r1), s.admit(r2)
+    mb = s.pop_launchable(now=r1.t_enqueue)     # full: no waiting needed
+    assert mb is not None and not mb.aged_out
+    assert len(mb.requests) == 2
+
+
+def test_ageout_force_flush_ignores_wait_budget():
+    """drain()'s force flush launches held partial buckets immediately."""
+    s = ShapeBucketingScheduler(
+        8, micro_batch=4, min_bucket_steps=4, max_wait_ms=10_000.0
+    )
+    q = RequestQueue()
+    r1 = q.submit(np.ones((3, 8), np.float32))
+    s.admit(r1)
+    assert s.pop_launchable(now=r1.t_enqueue) is None
+    mb = s.pop_launchable(now=r1.t_enqueue, force=True)
+    assert mb is not None and len(mb.requests) == 1
+
+
+def test_engine_ageout_counted_and_served_correctly():
+    """step_continuous under max_wait_ms: held, then launched + counted;
+    replies still bit-identical to solo runs."""
+    rng = np.random.default_rng(77)
+    net, report = mixed_net([16, 12, 8], rng)
+    engine = ServingEngine(
+        net, report, micro_batch=4, min_bucket_steps=4, max_wait_ms=30.0
+    )
+    sp = spikes_for(rng, 6, 16)
+    rid = engine.submit(sp)
+    # bucket is partial and young: nothing launches
+    assert engine.step_continuous() == {}
+    assert engine.stats()["ageout_launches"] == 0
+    time.sleep(0.05)
+    served = engine.step_continuous()
+    assert set(served) == {rid}
+    assert engine.stats()["ageout_launches"] == 1
+    for a, b in zip(served[rid], solo_run(net, report, sp)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_drain_flushes_held_buckets():
+    rng = np.random.default_rng(78)
+    net, report = mixed_net([16, 12, 8], rng)
+    engine = ServingEngine(
+        net, report, micro_batch=4, min_bucket_steps=4,
+        max_wait_ms=10_000.0,
+    )
+    rid = engine.submit(spikes_for(rng, 6, 16))
+    assert engine.step_continuous() == {}   # held by the wait budget
+    served = engine.drain()                  # wave flush ignores it
+    assert set(served) == {rid}
+
+
+def test_ageout_hold_yields_to_member_deadlines():
+    """A member whose deadline lands inside the hold window makes its
+    partial bucket launchable immediately — holding it would guarantee
+    the deadline miss."""
+    s = ShapeBucketingScheduler(
+        8, micro_batch=4, min_bucket_steps=4, max_wait_ms=10_000.0
+    )
+    q = RequestQueue()
+    r = q.submit(np.ones((3, 8), np.float32), deadline_ms=50.0)
+    s.admit(r)
+    mb = s.pop_launchable(now=r.t_enqueue)   # no waiting despite the hold
+    assert mb is not None
+    assert [x.request_id for x in mb.requests] == [r.request_id]
+    assert not mb.aged_out                   # deadline escape, not age-out
+    # a deadline beyond the age-out instant does NOT bypass the hold
+    r2 = q.submit(np.ones((3, 8), np.float32), deadline_ms=60_000.0)
+    s.admit(r2)
+    assert s.pop_launchable(now=r2.t_enqueue) is None
+
+
+def test_engine_tight_deadline_not_held_by_ageout():
+    rng = np.random.default_rng(79)
+    net, report = mixed_net([16, 12, 8], rng)
+    engine = ServingEngine(
+        net, report, micro_batch=4, min_bucket_steps=4,
+        max_wait_ms=10_000.0,
+    )
+    sp = spikes_for(rng, 6, 16)
+    rid = engine.submit(sp, deadline_ms=5_000.0)
+    served = engine.step_continuous()        # launches now, not in 10 s
+    assert set(served) == {rid}
+    assert not isinstance(served[rid], ShedReply)
+    assert engine.stats()["deadline_miss_rate"] == 0.0

@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Refit ``SerialBatchCostModel`` constants from the measured batch sweep.
+
+The event/dense serial-kernel crossover baked into
+``repro.core.cost_model.DEFAULT_SERIAL_BATCH_COST`` was fitted to the CPU
+backend; on a different backend (TPU, another host) the scatter/MAC cost
+ratio shifts and the hard-coded constants drift.  This tool closes the
+loop: it reads the measured event-vs-dense curves that
+``benchmarks/bench_network.py run_batch_sweep`` recorded in
+``BENCH_network.json`` -> ``batch_sweep``, rebuilds the sweep network to
+count its synaptic rows and dense MACs exactly (the sweep records sizes /
+density / delay_range and uses fixed per-layer seeds), and solves the
+model constants so the predicted crossover tracks where the measured
+curves actually cross:
+
+    PYTHONPATH=src python tools/fit_cost_model.py            # fit + write
+    PYTHONPATH=src python tools/fit_cost_model.py --dry-run  # fit + print
+
+The fitted constants are written back into ``BENCH_network.json`` under
+``"cost_model_fit"`` (next to the curves they came from, so drift stays
+visible) and printed as a ``SerialBatchCostModel(...)`` line ready to
+paste over the defaults when promoting a backend's fit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.core.cost_model import (                      # noqa: E402
+    DEFAULT_SERIAL_BATCH_COST,
+    SerialBatchCostModel,
+)
+from repro.core.layer import random_layer                # noqa: E402
+
+
+def sweep_totals(sweep: dict) -> tuple:
+    """Exact (rows_total, dense_macs_per_batch) of the sweep's serial net.
+
+    ``run_batch_sweep`` builds its serial network with fixed per-layer
+    seeds (``seed=i``), so the row count is reproducible from the
+    recorded geometry alone.
+    """
+    sizes = sweep["sizes"]
+    density, delay_range = sweep["density"], sweep["delay_range"]
+    rows = macs = 0
+    for i in range(len(sizes) - 1):
+        layer = random_layer(
+            sizes[i], sizes[i + 1], density, delay_range, seed=i
+        )
+        rows += layer.n_synapses
+        macs += sizes[i] * (delay_range + 1) * sizes[i + 1]
+    return rows, macs
+
+
+def fit_from_bench(bench: dict) -> dict:
+    sweep = bench.get("batch_sweep")
+    if not sweep or not sweep.get("points"):
+        raise SystemExit(
+            "BENCH_network.json has no batch_sweep section — run "
+            "`PYTHONPATH=src python -m benchmarks.bench_network` first"
+        )
+    rows, macs = sweep_totals(sweep)
+    points = [
+        {
+            "batch": p["batch"],
+            "event_us": p["serial_event_us"],
+            "dense_us": p["serial_dense_us"],
+        }
+        for p in sweep["points"]
+    ]
+    fitted = SerialBatchCostModel.fit_from_sweep(
+        points, n_rows_total=rows, dense_macs_per_batch=macs
+    )
+    sizes = sweep["sizes"]
+    per_layer = []
+    for i in range(len(sizes) - 1):
+        layer = random_layer(
+            sizes[i], sizes[i + 1], sweep["density"], sweep["delay_range"],
+            seed=i,
+        )
+        per_layer.append(
+            {
+                "layer": i,
+                "default_crossover": round(
+                    DEFAULT_SERIAL_BATCH_COST.crossover_batch(
+                        layer.n_synapses, sizes[i], sizes[i + 1],
+                        sweep["delay_range"],
+                    ), 2
+                ),
+                "fitted_crossover": round(
+                    fitted.crossover_batch(
+                        layer.n_synapses, sizes[i], sizes[i + 1],
+                        sweep["delay_range"],
+                    ), 2
+                ),
+            }
+        )
+    return {
+        "fitted": fitted.as_dict(),
+        "default": DEFAULT_SERIAL_BATCH_COST.as_dict(),
+        "n_rows_total": rows,
+        "dense_macs_per_batch": macs,
+        "crossovers": per_layer,
+        "fitted_from_batches": [p["batch"] for p in points],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--bench", type=Path, default=REPO / "BENCH_network.json",
+        help="path to BENCH_network.json (default: repo root)",
+    )
+    ap.add_argument(
+        "--dry-run", action="store_true",
+        help="print the fit without writing cost_model_fit back",
+    )
+    args = ap.parse_args()
+    bench = json.loads(args.bench.read_text())
+    result = fit_from_bench(bench)
+    f, d = result["fitted"], result["default"]
+    print(f"sweep network: rows={result['n_rows_total']}, "
+          f"dense MACs/batch={result['dense_macs_per_batch']}")
+    print(f"default: scatter={d['scatter_coeff']:.2f} "
+          f"exponent={d['batch_exponent']:.3f}")
+    print(f"fitted:  scatter={f['scatter_coeff']:.2f} "
+          f"exponent={f['batch_exponent']:.3f}")
+    for row in result["crossovers"]:
+        print(f"  layer {row['layer']}: crossover "
+              f"{row['default_crossover']} -> {row['fitted_crossover']}")
+    print("promote with:")
+    print(f"  SerialBatchCostModel(scatter_coeff={f['scatter_coeff']:.3f}, "
+          f"batch_exponent={f['batch_exponent']:.3f})")
+    if not args.dry_run:
+        bench["cost_model_fit"] = result
+        args.bench.write_text(json.dumps(bench, indent=2) + "\n")
+        print(f"wrote {args.bench.name} -> cost_model_fit")
+
+
+if __name__ == "__main__":
+    main()
