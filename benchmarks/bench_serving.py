@@ -19,6 +19,14 @@ wave draining on p95 latency, that the steady state stays re-lowering
 free in both modes, that nothing is shed, and that a sample of replies
 is bit-identical to solo runs on the owning model.
 
+**Supervisor overhead** (PR 6) — the same steady-state micro-batches
+launched twice on warm paths: raw pool launches (the pre-supervisor hot
+path: launch, host-materialize, slice replies) vs launches through the
+:class:`~repro.serving.supervisor.LaunchSupervisor` (watchdog timing,
+output validation, breaker/heartbeat/straggler bookkeeping, reply
+slicing).  Asserts the fault-free overhead stays under 2% and that the
+supervised run needed zero retries/degradations.
+
 All timed sections stop the clock only after results are
 host-materialized or ``jax.block_until_ready`` has passed; batched-vs-
 solo uses best-of-N (the noise-robust estimator) to survive this host's
@@ -430,6 +438,133 @@ def run_continuous_vs_wave(*, n_requests: int = 96,
     }
 
 
+# ---------------------------------------------------------------------------
+# Scenario 3 (PR 6): launch-supervisor overhead on the fault-free path
+# ---------------------------------------------------------------------------
+
+def run_supervisor_overhead(*, n_requests: int = 48, micro_batch: int = 8,
+                            reps: int = 40, trials: int = 3) -> dict:
+    """Raw pool launches vs supervised launches on identical warm batches.
+
+    The supervisor adds per-launch watchdog timing, output-validation
+    consumption (launches self-check in-graph: the jitted program
+    reduces every train to one "all entries 0/1" scalar, so the
+    fault-free path reads a flag instead of re-scanning host arrays),
+    breaker/heartbeat/straggler bookkeeping, and reply trimming.  This
+    scenario bounds that cost on the path that matters — fault-free
+    steady state — at under 2%.
+
+    Measuring a sub-2% delta on a ~25 ms loop with multi-ms OS jitter
+    needs a robust estimator: raw and supervised launches of the *same*
+    micro-batch are timed back-to-back (shared background/thermal
+    state), each micro-batch's time is taken as the **median over
+    ``reps`` interleaved samples** (kills scheduler spikes), the loop
+    times are the sums of those per-batch medians, and the reported
+    overhead is the **median over ``trials`` independent trials** of
+    that ratio.
+    """
+    print("\n# launch-supervisor overhead (fault-free steady state)")
+    from repro.serving import (
+        BucketKey, ExecutablePool, LaunchSupervisor, RequestQueue,
+        ShapeBucketingScheduler,
+    )
+
+    net, report = _parallel_network(SIZES, "supervised")
+    rng = np.random.default_rng(3)
+    traffic = poisson_traffic(rng, n_requests, 800.0)
+
+    q = RequestQueue()
+    sched = ShapeBucketingScheduler(
+        SIZES[0], micro_batch=micro_batch, min_bucket_steps=8
+    )
+    pool = ExecutablePool()
+    pool.register(net, report)
+    pool.warmup([
+        BucketKey(sched.bucket_steps(s), SIZES[0], micro_batch)
+        for s, _, _ in SHAPE_MIX
+    ])
+    for _, sp in traffic:
+        sched.admit(q.submit(sp))
+    mbs = []
+    while True:
+        mb = sched.pop_launchable(force=True)
+        if mb is None:
+            break
+        mbs.append(mb)
+    supervisor = LaunchSupervisor(pool, watchdog_s=5.0)
+
+    def raw_mb(mb):
+        # the pre-supervisor hot path: launch, host-materialize, trim
+        host = [np.asarray(z) for z in pool.run_microbatch(mb)]
+        for b, req in enumerate(mb.requests):
+            [z[: req.steps, b] for z in host]
+
+    for mb in mbs:                      # both paths fully warm
+        raw_mb(mb)
+        supervisor.run(mb)
+
+    def _median(vals):
+        vals = sorted(vals)
+        return vals[len(vals) // 2]
+
+    trial_results = []
+    for _ in range(trials):
+        raw_t = [[] for _ in mbs]
+        sup_t = [[] for _ in mbs]
+        for rep in range(reps):
+            for i, mb in enumerate(mbs):
+                # alternate which path goes first so neither always
+                # inherits the other's cache state
+                order = (raw_mb, supervisor.run) if rep % 2 == 0 else (
+                    supervisor.run, raw_mb)
+                slots = (raw_t, sup_t) if rep % 2 == 0 else (sup_t, raw_t)
+                t0 = time.perf_counter()
+                order[0](mb)
+                t1 = time.perf_counter()
+                order[1](mb)
+                t2 = time.perf_counter()
+                slots[0][i].append(t1 - t0)
+                slots[1][i].append(t2 - t1)
+        trial_raw = sum(_median(v) for v in raw_t)
+        trial_sup = sum(_median(v) for v in sup_t)
+        trial_results.append((trial_raw, trial_sup))
+    trial_results.sort(key=lambda p: p[1] / p[0])   # median trial by ratio
+    t_raw, t_sup = trial_results[len(trial_results) // 2]
+    overhead = t_sup / t_raw - 1.0
+
+    csv_row("serving_raw_launch_loop", t_raw * 1e6,
+            f"microbatches={len(mbs)}")
+    csv_row("serving_supervised_launch_loop", t_sup * 1e6,
+            f"microbatches={len(mbs)}")
+    csv_row("serving_supervisor_overhead", 0.0,
+            f"fault_free_fraction={overhead:.4f}")
+    print(f"  raw {t_raw * 1e3:.2f} ms  supervised {t_sup * 1e3:.2f} ms  "
+          f"overhead {overhead * 100:.2f}% over {len(mbs)} micro-batches")
+
+    counters = supervisor.counters
+    assert counters["retries"] == 0, counters
+    assert counters["degraded_launches"] == 0, counters
+    assert counters["quarantined"] == 0, counters
+    assert counters["watchdog_stalls"] == 0, counters
+    assert overhead < 0.02, f"supervisor overhead {overhead:.4f} >= 2%"
+
+    return {
+        "n_requests": n_requests,
+        "micro_batches": len(mbs),
+        "micro_batch": micro_batch,
+        "raw_launch_loop_s": t_raw,
+        "supervised_launch_loop_s": t_sup,
+        "overhead_fraction": overhead,
+        "budget_fraction": 0.02,
+        "supervised_counters": {
+            k: counters[k]
+            for k in ("launch_attempts", "retries", "degraded_launches",
+                      "quarantined", "watchdog_stalls",
+                      "validation_failures")
+        },
+    }
+
+
 def run(*, n_requests: int = 64, arrival_rate_hz: float = 800.0,
         window_s: float = 0.02, micro_batch: int = 16) -> dict:
     result = {
@@ -438,6 +573,7 @@ def run(*, n_requests: int = 64, arrival_rate_hz: float = 800.0,
             window_s=window_s, micro_batch=micro_batch,
         ),
         "continuous_vs_wave": run_continuous_vs_wave(),
+        "supervisor_overhead": run_supervisor_overhead(),
     }
     _JSON_PATH.write_text(json.dumps(result, indent=2) + "\n")
     ss = result["steady_state"]["throughput"]
@@ -445,7 +581,8 @@ def run(*, n_requests: int = 64, arrival_rate_hz: float = 800.0,
           f"(batched {ss['speedup_batched_vs_one_at_a_time']:.2f}x vs "
           f"one-at-a-time; continuous p95 "
           f"{result['continuous_vs_wave']['p95_wave_over_continuous']:.2f}x "
-          f"lower than wave)")
+          f"lower than wave; supervisor overhead "
+          f"{result['supervisor_overhead']['overhead_fraction'] * 100:.2f}%)")
     return result
 
 

@@ -18,9 +18,11 @@ from .executor import (
     GraphPlan,
     LayerMeta,
     NetworkExecutable,
+    OutputValidationError,
     get_layer_executable,
     network_executable,
     release_network_executable,
+    validate_spike_outputs,
 )
 from .network import run_network, run_network_layerwise
 
@@ -51,6 +53,7 @@ __all__ = [
     "ParallelExecutable", "lower_parallel", "parallel_project",
     "run_parallel",
     "GraphPlan", "LayerMeta", "NetworkExecutable",
+    "OutputValidationError", "validate_spike_outputs",
     "get_layer_executable", "network_executable",
     "release_network_executable",
     "lowering_counts", "lowering_total",

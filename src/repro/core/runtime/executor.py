@@ -432,6 +432,14 @@ class NetworkExecutable:
         self._dense = {}     # layer index -> (d_slots, S, T) dense operand
         self._mesh = None    # set by shard(); None = identity fallback
         self._rules = None
+        #: Device scalar from the last launch: True iff every output
+        #: entry was exactly 0.0 or 1.0 (NaN/Inf equal neither).  The
+        #: check runs *inside* the jitted launch program — fused with the
+        #: scan epilogue it costs no extra dispatch and reads the trains
+        #: while they are still hot on the compute threads — so the
+        #: serving supervisor can validate fault-free launches without a
+        #: host-side pass over the data.
+        self.last_check = None
 
     def jit_entries(self) -> int:
         """Distinct jitted scan entries held by this handle."""
@@ -611,8 +619,23 @@ class NetworkExecutable:
         fn = self._fns.get(key)
         if fn is None:
             scan = _batched_scan if path == "vmap" else _scan_network
+            inner = partial(scan, self.plan, self.metas, forms, interpret)
+
+            def checked(params, states, spikes, valid_steps):
+                outs, final = inner(params, states, spikes, valid_steps)
+                # in-graph output self-check: every spike entry must be
+                # exactly 0.0 or 1.0 (subsumes finiteness — NaN and Inf
+                # equal neither), reduced to one scalar the launch
+                # returns alongside the trains
+                ok = jnp.bool_(True)
+                for z in outs:
+                    ok = jnp.logical_and(
+                        ok, jnp.all((z == 0.0) | (z == 1.0))
+                    )
+                return outs, final, ok
+
             fn = jax.jit(
-                partial(scan, self.plan, self.metas, forms, interpret),
+                checked,
                 # donate the carry (arg 1: states) so membrane / ring
                 # buffers update in place
                 donate_argnums=(1,) if self.donate else (),
@@ -631,7 +654,9 @@ class NetworkExecutable:
             jnp.asarray(spikes, jnp.float32), valid_steps
         )
         states = _init_graph_carry(self.plan, self.metas, spikes.shape[1])
-        outs, _final = fn(self._params_for(forms), states, spikes, valid_steps)
+        outs, _final, self.last_check = fn(
+            self._params_for(forms), states, spikes, valid_steps
+        )
         # per-population device trains -> the per-projection API view
         # (entry i = projection i's target population; fan-in entries
         # alias the same array)
@@ -705,6 +730,60 @@ class NetworkExecutable:
         )
         # single host sync, after the whole network finished on device
         return [np.asarray(z) for z in outs]
+
+
+class OutputValidationError(ValueError):
+    """A launch returned spike trains that cannot be served.
+
+    Raised by :func:`validate_spike_outputs` when a result violates the
+    output contract (shape, dtype, finiteness, binariness).  The serving
+    supervisor treats it as a launch *fault* — the corrupted result is
+    discarded and the launch retried — rather than serving garbage.
+    """
+
+
+def validate_spike_outputs(
+    outs,
+    *,
+    steps: int,
+    batch: int,
+    sizes: Optional[Tuple[int, ...]] = None,
+) -> None:
+    """Post-launch guard: every output train must be a servable spike train.
+
+    Checks, per projection output: shape ``(steps, batch, n_target)``
+    (``sizes`` supplies the expected widths when known), float32 dtype,
+    and every entry exactly 0.0 or 1.0.  The binary check subsumes
+    finiteness — NaN and Inf compare unequal to both 0 and 1 — so one
+    vectorized pass covers the divergent-membrane (non-finite) and
+    corrupted-spike (non-binary) failure signatures; the raised message
+    still distinguishes them.  Raises :class:`OutputValidationError`;
+    returns ``None`` on clean outputs.
+    """
+    if sizes is not None and len(outs) != len(sizes):
+        raise OutputValidationError(
+            f"expected {len(sizes)} projection outputs; got {len(outs)}"
+        )
+    for i, z in enumerate(outs):
+        arr = np.asarray(z)
+        want = (steps, batch) if sizes is None else (steps, batch, sizes[i])
+        if arr.ndim != 3 or arr.shape[: len(want)] != want:
+            raise OutputValidationError(
+                f"projection {i}: expected (T, B, n_target) shape starting "
+                f"{want}; got {arr.shape}"
+            )
+        if arr.dtype != np.float32:
+            raise OutputValidationError(
+                f"projection {i}: expected float32 spikes; got {arr.dtype}"
+            )
+        if not bool(np.all((arr == 0.0) | (arr == 1.0))):
+            kind = (
+                "non-finite" if not bool(np.all(np.isfinite(arr)))
+                else "non-binary"
+            )
+            raise OutputValidationError(
+                f"projection {i}: {kind} entries in the output spike train"
+            )
 
 
 def _matches_network(exe: NetworkExecutable, net: SNNNetwork) -> bool:

@@ -15,6 +15,14 @@ On thousands of nodes three failure classes dominate; each has a handler:
 
 This module is deliberately runtime-agnostic (pure bookkeeping + planning)
 so it unit-tests on one host; the launchers wire it to real signals.
+
+Two consumers exist today: the training-style ``FaultTolerantDriver``
+below, and the serving stack's launch supervisor
+(:class:`repro.serving.supervisor.LaunchSupervisor`), which beats the
+:class:`HeartbeatRegistry` from the continuous-serving loop and every
+completed launch, feeds per-``(model, bucket)`` launch wall-times into
+the :class:`StragglerDetector` as its launch-stall signal, and drives
+its retry backoff from :class:`RestartPolicy`.
 """
 from __future__ import annotations
 
@@ -50,6 +58,16 @@ class HeartbeatRegistry:
             h for h, st in self.hosts.items()
             if now - st.last_heartbeat > self.timeout_s
         ]
+
+    def age(
+        self, host_id: int, now: Optional[float] = None
+    ) -> Optional[float]:
+        """Seconds since ``host_id`` last beat; ``None`` if never seen."""
+        st = self.hosts.get(host_id)
+        if st is None:
+            return None
+        now = time.monotonic() if now is None else now
+        return now - st.last_heartbeat
 
 
 class StragglerDetector:

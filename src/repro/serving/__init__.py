@@ -14,10 +14,32 @@ throughput, and bucket-hit rate.  Two batching modes: **wave draining**
 batching** (``engine.step_continuous()`` / ``serve_forever()`` — new
 requests join open in-flight buckets between scan launches).  See
 ``docs/serving.md`` for the request lifecycle and tuning guidance.
+
+Every launch runs under the :class:`LaunchSupervisor` — watchdog,
+retry with backoff, batched<->fused degradation behind per-bucket
+:class:`CircuitBreaker`\\ s, poison-request bisection to
+:class:`FailedReply` quarantine, and output validation.  The
+:class:`FaultInjector` arms deterministic, seedable faults for chaos
+testing.  See ``docs/robustness.md``.
 """
-from .engine import Reply, RequestResult, ServingEngine, ShedReply
-from .metrics import RequestRecord, ServingMetrics, ShedRecord
+from .engine import (
+    Reply,
+    RequestResult,
+    ServingEngine,
+    ShedReply,
+    ShutdownReply,
+)
+from .faults import (
+    FAULT_KINDS,
+    DeviceLost,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    LoweringFault,
+)
+from .metrics import FailedRecord, RequestRecord, ServingMetrics, ShedRecord
 from .pool import ExecutablePool, PoolEntry, UnknownModel
+from .supervisor import CircuitBreaker, FailedReply, LaunchSupervisor
 from .queue import (
     DEFAULT_MODEL,
     InferenceRequest,
@@ -31,14 +53,19 @@ from .scheduler import (
     OpenBucket,
     ShapeBucketingScheduler,
     next_pow2,
+    pad_microbatch,
 )
 
 __all__ = [
     "ServingEngine", "RequestResult", "Reply", "ShedReply",
-    "ServingMetrics", "RequestRecord", "ShedRecord",
+    "ShutdownReply",
+    "ServingMetrics", "RequestRecord", "ShedRecord", "FailedRecord",
     "ExecutablePool", "PoolEntry", "UnknownModel",
     "RequestQueue", "SNNRequest", "InferenceRequest", "QueueFull",
     "DEFAULT_MODEL",
     "ShapeBucketingScheduler", "BucketKey", "MicroBatch", "OpenBucket",
-    "next_pow2",
+    "next_pow2", "pad_microbatch",
+    "LaunchSupervisor", "CircuitBreaker", "FailedReply",
+    "FaultInjector", "FaultSpec", "FAULT_KINDS",
+    "InjectedFault", "LoweringFault", "DeviceLost",
 ]

@@ -29,6 +29,17 @@ would have used — the sync results dict or the async future — never a
 silent drop.  Results come back trimmed to every request's true
 ``(steps, n_layer)`` shape, bit-identical to running that request alone
 (the executor's step-count mask keeps padding inert).
+
+**Every submit gets exactly one reply**, of exactly one type: the
+result, a :class:`ShedReply` (expired unserved), a
+:class:`~repro.serving.supervisor.FailedReply` (quarantined by the
+launch supervisor after retries, path degradation, and bisection all
+failed), or a :class:`ShutdownReply` (the engine stopped first).  Every
+launch runs under the :class:`~repro.serving.supervisor.LaunchSupervisor`
+— watchdog, retry with backoff, batched<->fused degradation behind
+per-``(model, bucket, path)`` circuit breakers, poison-request
+bisection, and output validation; see :mod:`repro.serving.supervisor`
+and ``docs/robustness.md``.
 """
 from __future__ import annotations
 
@@ -42,10 +53,12 @@ import numpy as np
 
 from ..core.layer import SNNNetwork
 from ..core.switching import CompileReport
-from .metrics import RequestRecord, ServingMetrics, ShedRecord
+from ..distributed.fault_tolerance import RestartPolicy
+from .metrics import FailedRecord, RequestRecord, ServingMetrics, ShedRecord
 from .pool import ExecutablePool, PoolEntry, UnknownModel
 from .queue import DEFAULT_MODEL, RequestQueue, SNNRequest
 from .scheduler import BucketKey, MicroBatch, ShapeBucketingScheduler
+from .supervisor import FailedReply, LaunchSupervisor
 
 #: A served result: per-layer spike trains [(steps, n_l) ...], true length.
 RequestResult = List[np.ndarray]
@@ -71,8 +84,26 @@ class ShedReply:
         return False
 
 
-#: What one request gets back: its spike trains, or a shed notice.
-Reply = Union[RequestResult, ShedReply]
+@dataclasses.dataclass
+class ShutdownReply:
+    """Delivered to async waiters still pending when the engine stops.
+
+    :meth:`ServingEngine.stop` resolves every registered future with one
+    of these instead of leaving the waiter hanging forever — the
+    exactly-one-reply guarantee holds through shutdown.  Check with
+    ``isinstance(reply, ShutdownReply)``.
+    """
+
+    request_id: int
+    message: str = "engine stopped before this request was served"
+
+    def __bool__(self) -> bool:        # a shutdown reply is a non-result
+        return False
+
+
+#: What one request gets back: its spike trains, a shed notice, a
+#: supervisor quarantine notice, or a shutdown notice.
+Reply = Union[RequestResult, ShedReply, FailedReply, ShutdownReply]
 
 
 class ServingEngine:
@@ -105,6 +136,13 @@ class ServingEngine:
         interpret: bool | None = None,
         full_bucket_path: str = "batched",
         max_wait_ms: Optional[float] = None,
+        fault_injector=None,
+        watchdog_s: Optional[float] = None,
+        max_launch_retries: int = 2,
+        retry_backoff_s: float = 0.002,
+        breaker_threshold: int = 3,
+        breaker_cooldown_s: float = 0.25,
+        validate_outputs: bool = True,
     ):
         self.queue = RequestQueue(max_pending=max_pending)
         self.scheduler = ShapeBucketingScheduler(
@@ -116,9 +154,24 @@ class ServingEngine:
         self.pool = ExecutablePool(
             interpret=interpret, max_models=max_models,
             full_bucket_path=full_bucket_path,
+            fault_injector=fault_injector,
         )
         self.pool.register(net, report)
         self.metrics = ServingMetrics()
+        #: Resilience layer every launch runs under — watchdog, retries,
+        #: path degradation behind circuit breakers, bisection,
+        #: output validation (``watchdog_s=None`` disables the watchdog,
+        #: ``validate_outputs=False`` the validation guard).
+        self.supervisor = LaunchSupervisor(
+            self.pool,
+            policy=RestartPolicy(
+                max_retries=max_launch_retries, backoff_s=retry_backoff_s
+            ),
+            watchdog_s=watchdog_s,
+            breaker_threshold=breaker_threshold,
+            breaker_cooldown_s=breaker_cooldown_s,
+            validate=validate_outputs,
+        )
         #: Sync-path replies, oldest evicted beyond ``max_retained_results``
         #: (async replies are delivered through their futures, not stored).
         self.results: "OrderedDict[int, Reply]" = OrderedDict()
@@ -299,19 +352,26 @@ class ServingEngine:
         except RuntimeError:        # loop already closed; waiter is gone
             pass
 
-    def _run_microbatch(self, mb: MicroBatch) -> Dict[int, RequestResult]:
+    def _run_microbatch(self, mb: MicroBatch) -> Dict[int, Reply]:
         if mb.aged_out:
             self.metrics.record_ageout()
         t_dispatch = time.perf_counter()
-        # the pool routes by occupancy: full buckets take its configured
-        # full_bucket_path (vmapped request-axis by default), partial
-        # buckets the fused in-scan path
-        outs = self.pool.run_microbatch(mb, block=True)
+        # every launch runs under the supervisor: watchdog + retries +
+        # path degradation behind circuit breakers + bisection +
+        # output validation; each request comes back as trimmed trains
+        # or a typed FailedReply — never an unwound exception
+        replies = self.supervisor.run(mb)
         t_complete = time.perf_counter()
-        host_outs = [np.asarray(z) for z in outs]
-        served, records = {}, []
-        for b, req in enumerate(mb.requests):
-            served[req.request_id] = [z[: req.steps, b] for z in host_outs]
+        req_by_id = {req.request_id: req for req in mb.requests}
+        records = []
+        for rid, reply in replies.items():
+            if isinstance(reply, FailedReply):
+                # same field set by design; asdict keeps them from drifting
+                self.metrics.record_failed(
+                    FailedRecord(**dataclasses.asdict(reply))
+                )
+                continue
+            req = req_by_id[rid]
             records.append(
                 RequestRecord(
                     request_id=req.request_id,
@@ -327,8 +387,9 @@ class ServingEngine:
                     deadline_ms=req.deadline_ms,
                 )
             )
-        self.metrics.record_batch(records)
-        return served
+        if records:
+            self.metrics.record_batch(records)
+        return replies
 
     # -- asynchronous path ---------------------------------------------------
     async def submit_async(
@@ -370,6 +431,9 @@ class ServingEngine:
         self._running = True
         try:
             while self._running:
+                # liveness signal for the supervisor's heartbeat registry:
+                # the loop itself is host 1, launches are host 0
+                self.supervisor.beat_loop()
                 if self.queue.empty() and not self.scheduler.has_open():
                     await asyncio.sleep(poll_interval)
                     continue
@@ -387,7 +451,16 @@ class ServingEngine:
             self._running = False
 
     def stop(self) -> None:
+        """Stop serving and resolve every still-pending async future.
+
+        A waiter whose request was never served receives a typed
+        :class:`ShutdownReply` instead of hanging forever — shutdown
+        preserves the exactly-one-reply guarantee.
+        """
         self._running = False
+        futures, self._futures = self._futures, {}
+        for rid, fut in futures.items():
+            self._resolve_future(fut, ShutdownReply(request_id=rid))
 
     # -- introspection -------------------------------------------------------
     def stats(self) -> Dict:
@@ -398,4 +471,5 @@ class ServingEngine:
             bucket_misses=self.pool.bucket_misses,
             relowerings=self.pool.relowerings(),
             by_model=self.pool.counters_by_model(),
+            supervisor=self.supervisor.stats(),
         )

@@ -2,7 +2,10 @@
 
 Every completed request contributes one :class:`RequestRecord`; every
 *shed* request (deadline expired before admission) contributes one
-:class:`ShedRecord`.  The :class:`ServingMetrics` aggregate answers the
+:class:`ShedRecord`; every *failed* request (quarantined by the launch
+supervisor after retries, path degradation, and bisection all failed)
+contributes one :class:`FailedRecord`.  The :class:`ServingMetrics`
+aggregate answers the
 questions the north star cares about: how long does a user wait (queue +
 execution latency percentiles, overall and **per priority class**), how
 often do deadlines fail (shed rate + served-late rate = deadline-miss
@@ -62,6 +65,23 @@ class ShedRecord:
     waited_ms: float            # how long it sat in the queue before shedding
 
 
+@dataclasses.dataclass
+class FailedRecord:
+    """One request quarantined by the launch supervisor.
+
+    Field-compatible with :class:`repro.serving.supervisor.FailedReply`
+    so the engine converts with ``FailedRecord(**asdict(reply))`` —
+    the same pattern :class:`ShedRecord` shares with ``ShedReply``.
+    """
+
+    request_id: int
+    model: str
+    priority: int
+    fault_kind: str
+    attempts: int
+    message: str = ""
+
+
 class ServingMetrics:
     """Aggregates request records plus pool counters into one summary.
 
@@ -74,10 +94,12 @@ class ServingMetrics:
     def __init__(self, max_records: int = 65536):
         self.records: deque = deque(maxlen=max_records)
         self.shed_records: deque = deque(maxlen=max_records)
+        self.failed_records: deque = deque(maxlen=max_records)
         self.batches_dispatched = 0
         self.total_requests = 0
         self.total_request_steps = 0
         self.total_shed = 0
+        self.total_failed = 0
         #: Launches of under-full buckets forced by the scheduler's
         #: partial-bucket age-out (``max_wait_ms``) — how often padding
         #: waste was spent to bound queue wait.
@@ -95,6 +117,10 @@ class ServingMetrics:
     def record_shed(self, record: ShedRecord) -> None:
         self.total_shed += 1
         self.shed_records.append(record)
+
+    def record_failed(self, record: FailedRecord) -> None:
+        self.total_failed += 1
+        self.failed_records.append(record)
 
     # -- aggregates ----------------------------------------------------------
     @property
@@ -157,21 +183,27 @@ class ServingMetrics:
         bucket_misses: int = 0,
         relowerings: int = 0,
         by_model: Optional[Dict] = None,
+        supervisor: Optional[Dict] = None,
     ) -> Dict:
         """One flat summary dict of everything above.
 
-        Keys: ``requests``, ``shed``, ``batches``, ``ageout_launches``,
+        Keys: ``requests``, ``shed``, ``failed``, ``batches``,
+        ``ageout_launches``,
         ``mean_batch_occupancy``, ``mean_queue_wait_ms``, ``p50_ms`` /
         ``p95_ms`` / ``max_ms`` (overall), ``latency_by_priority``
         (per-class percentiles), ``deadline_miss_rate`` (None when no
         request carried a deadline), ``throughput_request_steps_per_s``,
         ``padding_overhead``, bucket hit/miss counters (+ optional
-        ``by_model`` breakdown), and ``relowerings``.
+        ``by_model`` breakdown), ``relowerings``, and — when the engine
+        passes its launch supervisor's stats — a ``supervisor`` sub-dict
+        (retries, stalls, validation failures, degraded launches,
+        quarantines, breaker states).
         """
         total = bucket_hits + bucket_misses
         out = {
             "requests": self.n_requests,
             "shed": self.total_shed,
+            "failed": self.total_failed,
             "batches": self.batches_dispatched,
             "ageout_launches": self.total_ageout_launches,
             "mean_batch_occupancy": (
@@ -195,6 +227,8 @@ class ServingMetrics:
         }
         if by_model is not None:
             out["by_model"] = by_model
+        if supervisor is not None:
+            out["supervisor"] = supervisor
         return out
 
     #: Backwards-compatible alias for :meth:`snapshot`.

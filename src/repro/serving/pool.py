@@ -86,6 +86,12 @@ class PoolEntry:
     def n_input(self) -> int:
         return self.net.n_input
 
+    @property
+    def output_sizes(self) -> Tuple[int, ...]:
+        """Per-projection target-population widths — the output contract
+        the supervisor's post-launch validation guard checks against."""
+        return tuple(l.n_target for l in self.net.layers)
+
 
 class ExecutablePool:
     """Named compiled models, each with a warmed jit entry per bucket shape.
@@ -102,6 +108,7 @@ class ExecutablePool:
         interpret: bool | None = None,
         max_models: Optional[int] = None,
         full_bucket_path: str = "batched",
+        fault_injector=None,
     ):
         if max_models is not None and max_models < 1:
             raise ValueError("max_models must be >= 1 or None")
@@ -118,6 +125,15 @@ class ExecutablePool:
         #: where vmap-of-scan lowers poorly can pin "fused".  The paths
         #: are bit-identical either way.
         self.full_bucket_path = full_bucket_path
+        #: Optional :class:`~repro.serving.faults.FaultInjector` consulted
+        #: around every launch (``before_launch`` may raise or stall,
+        #: ``after_launch`` may corrupt outputs).  ``None`` = no injection;
+        #: the hooks cost nothing on the fault-free path.
+        self.fault_injector = fault_injector
+        #: In-graph output self-check of the most recent launch (device
+        #: bool scalar, see :meth:`run_microbatch`); None before any
+        #: launch or after a failed one.
+        self.last_launch_check = None
         #: LRU order: least-recently-used first.
         self._entries: "OrderedDict[str, PoolEntry]" = OrderedDict()
         self.evictions = 0
@@ -157,6 +173,20 @@ class ExecutablePool:
             entry.executable
             self._enforce_cap(keep=name)
         return entry
+
+    def peek(self, name: str = DEFAULT_MODEL) -> PoolEntry:
+        """The named entry with NO side effects — no LRU touch, no revival.
+
+        For introspection (the supervisor reads the output contract from
+        here); launches must go through :meth:`entry` / :meth:`run_microbatch`
+        so use-ordering and revival accounting stay correct.
+        """
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise UnknownModel(
+                f"model {name!r} not registered; have {self.models()}"
+            ) from None
 
     def models(self) -> List[str]:
         return list(self._entries)
@@ -264,7 +294,16 @@ class ExecutablePool:
         bit-identical either way.  With ``block`` (default) the call
         returns only after the device finishes, so wall-clock around it
         measures real execution time.
+
+        After a completed launch, ``last_launch_check`` holds the
+        executable's in-graph output self-check (a device scalar: True
+        iff every output entry is exactly 0/1) — what the launch
+        supervisor consumes to validate fault-free results without a
+        host-side pass.  It reflects the *device* result: post-launch
+        injector corruption happens on host copies and is caught by the
+        host validator instead.
         """
+        self.last_launch_check = None
         if path is None:
             path = (
                 self.full_bucket_path
@@ -273,6 +312,12 @@ class ExecutablePool:
             )
         if path not in ("fused", "batched"):
             raise ValueError(f"unknown launch path {path!r}")
+        if self.fault_injector is not None:
+            # pre-launch faults (lowering failure, device loss, stall)
+            # fire before the hit/miss counting point, like the real
+            # failures they simulate — a launch that never reached the
+            # device must not book a bucket hit
+            self.fault_injector.before_launch(micro_batch, path)
         entry, exe = self._acquire(
             name if name is not None else micro_batch.model,
             micro_batch.key.shape, path,
@@ -289,6 +334,11 @@ class ExecutablePool:
         )
         if block:
             outs = jax.block_until_ready(outs)
+        self.last_launch_check = exe.last_check
+        if self.fault_injector is not None:
+            # post-launch corruption (NaN/Inf membrane, non-binary spikes)
+            # on host copies — device/cache buffers stay clean for retries
+            outs = self.fault_injector.after_launch(outs, micro_batch, path)
         return outs
 
     # -- counters ------------------------------------------------------------

@@ -119,11 +119,35 @@ class RequestQueue:
         priority: int = 0,
         deadline_ms: Optional[float] = None,
     ) -> SNNRequest:
-        """Validate, wrap, and enqueue one spike train; returns the request."""
-        spikes = np.asarray(spikes, np.float32)
+        """Validate, wrap, and enqueue one spike train; returns the request.
+
+        Rejects malformed payloads at the front door with a clear
+        ``ValueError`` — wrong rank, non-numeric dtype, non-finite
+        values (NaN/Inf), or non-binary entries — so garbage never
+        reaches a compiled launch, where it would surface as an opaque
+        device-side failure (or a quarantine) batches later.
+        """
+        raw = np.asarray(spikes)
+        if raw.dtype == object or raw.dtype.kind not in "bifu":
+            raise ValueError(
+                f"request spikes must be numeric 0/1; got dtype {raw.dtype}"
+            )
+        spikes = raw.astype(np.float32)
         if spikes.ndim != 2 or spikes.shape[0] < 1 or spikes.shape[1] < 1:
             raise ValueError(
                 f"request spikes must be (steps, n_in); got {spikes.shape}"
+            )
+        bad = ~((spikes == 0.0) | (spikes == 1.0))
+        if bad.any():
+            n_bad = int(bad.sum())
+            if not np.isfinite(spikes).all():
+                raise ValueError(
+                    f"request spikes contain non-finite values "
+                    f"({n_bad} bad entries); trains must be 0/1"
+                )
+            raise ValueError(
+                f"request spikes must be binary 0/1; "
+                f"{n_bad} entries are neither"
             )
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0; got {deadline_ms}")

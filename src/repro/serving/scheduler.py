@@ -300,12 +300,27 @@ class ShapeBucketingScheduler:
         requests: List[SNNRequest],
         model: str = DEFAULT_MODEL,
     ) -> MicroBatch:
-        spikes = np.zeros(key.shape, np.float32)
-        valid = np.zeros(key.batch, np.int32)
-        for b, req in enumerate(requests):
-            spikes[: req.steps, b, : req.n_in] = req.spikes
-            valid[b] = req.steps
-        return MicroBatch(
-            key=key, requests=requests, spikes=spikes, valid_steps=valid,
-            model=model,
-        )
+        return pad_microbatch(key, requests, model)
+
+
+def pad_microbatch(
+    key: BucketKey,
+    requests: List[SNNRequest],
+    model: str = DEFAULT_MODEL,
+) -> MicroBatch:
+    """Pad ``requests`` into one launchable micro-batch at ``key``'s shape.
+
+    Shared by the scheduler's bucket-closing paths and the launch
+    supervisor's recovery paths (bisection re-packs a failing batch's
+    subsets at the *same* bucket shape, so recovery launches stay warm
+    bucket hits instead of fresh compiles).
+    """
+    spikes = np.zeros(key.shape, np.float32)
+    valid = np.zeros(key.batch, np.int32)
+    for b, req in enumerate(requests):
+        spikes[: req.steps, b, : req.n_in] = req.spikes
+        valid[b] = req.steps
+    return MicroBatch(
+        key=key, requests=requests, spikes=spikes, valid_steps=valid,
+        model=model,
+    )

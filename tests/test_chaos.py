@@ -1,0 +1,308 @@
+"""Seeded chaos harness: the serving engine under an injected fault storm.
+
+The gate for the robustness layer, end-to-end against real compiled
+executables.  Properties under chaos:
+
+1. **No silent drops** — every submitted request gets exactly one reply
+   (result, ``FailedReply``, ``ShedReply``, or ``ShutdownReply``), sync
+   dict and async future alike.
+2. **Bit-identical recovery** — a request served after retries, path
+   degradation, or bisection yields spike trains identical to running
+   it alone fault-free (the padding-inertness invariant survives the
+   recovery machinery).
+3. **Quarantine precision** — a persistent poison request fails alone;
+   every other rider in its batches is still served.
+4. **Breaker lifecycle** — a persistently failing path trips its
+   breaker, traffic routes to the surviving path, and the half-open
+   probe restores the path once it heals.
+5. **The engine ends healthy** — post-storm traffic serves cleanly and
+   the storm is fully accounted for in ``stats()``.
+
+Fault plans are seeded and deterministic: the same plan + seed + launch
+sequence injects the same faults at the same positions.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import SwitchingCompiler, random_layer
+from repro.core.layer import LIFParams, SNNNetwork
+from repro.core.runtime import network_executable
+from repro.core.switching import CompileReport
+from repro.serving import (
+    FailedReply,
+    FaultInjector,
+    FaultSpec,
+    ServingEngine,
+)
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+
+def mixed_net(sizes, rng, start="serial"):
+    layers = []
+    for i in range(len(sizes) - 1):
+        l = random_layer(
+            sizes[i], sizes[i + 1],
+            density=float(rng.uniform(0.2, 0.7)),
+            delay_range=int(rng.integers(1, 6)),
+            seed=int(rng.integers(0, 2**31)),
+        )
+        l.lif = LIF
+        layers.append(l)
+    net = SNNNetwork(layers=layers)
+    order = ("serial", "parallel") if start == "serial" else ("parallel", "serial")
+    report = CompileReport(layers=[
+        SwitchingCompiler(order[i % 2]).compile_layer(l)
+        for i, l in enumerate(net.layers)
+    ])
+    return net, report
+
+
+def spikes_for(rng, steps, n_in):
+    return (rng.random((steps, n_in)) < 0.3).astype(np.float32)
+
+
+def solo_run(net, report, request):
+    """One request alone through the fused executable (the ground truth)."""
+    n_input = net.layers[0].n_source
+    x = np.zeros((request.shape[0], 1, n_input), np.float32)
+    x[:, 0, : request.shape[1]] = request
+    return [z[:, 0] for z in network_executable(net, report).run(x)]
+
+
+def assert_bit_identical(net, report, payload, reply):
+    assert not isinstance(reply, FailedReply), reply
+    for got, want in zip(reply, solo_run(net, report, payload)):
+        np.testing.assert_array_equal(got, want)
+
+
+# -- the storm ---------------------------------------------------------------
+
+def test_chaos_storm_every_request_replied_bit_identical():
+    rng = np.random.default_rng(1234)
+    net, report = mixed_net([8, 10, 6], rng)
+    injector = FaultInjector(seed=1234)
+    engine = ServingEngine(
+        net, report, micro_batch=4, min_bucket_steps=4,
+        fault_injector=injector,
+        max_launch_retries=3, retry_backoff_s=0.0005,
+    )
+    payloads = [
+        spikes_for(rng, int(rng.integers(3, 12)), 8) for _ in range(16)
+    ]
+    # several of every transient fault kind — raising kinds and
+    # output-corrupting kinds — all clear after their `times` launches
+    injector.arm_plan([
+        FaultSpec(kind="lowering", times=2),
+        FaultSpec(kind="device_lost", times=1),
+        FaultSpec(kind="nan_membrane", times=2),
+        FaultSpec(kind="nonbinary_spikes", times=1),
+    ])
+    rids = [engine.submit(sp) for sp in payloads]
+    replies = engine.drain()
+
+    # 1. exactly one reply per request, none silently dropped
+    assert set(replies) == set(rids)
+    # 2. transient faults are fully absorbed: every reply is the result
+    #    a fault-free solo run would have produced, bit for bit
+    for rid, sp in zip(rids, payloads):
+        assert_bit_identical(net, report, sp, replies[rid])
+
+    # the storm actually happened and is fully accounted for
+    assert injector.total_injected() == 6
+    assert injector.armed() == 0                # plan exhausted
+    sup = engine.stats()["supervisor"]
+    # each of the 6 faults was absorbed by a retry or a ladder step
+    assert sup["retries"] + sup["degraded_launches"] + sup["bisections"] >= 6
+    assert sup["retries"] >= 4
+    assert sup["validation_failures"] == 3      # 2 nan + 1 nonbinary
+    assert engine.stats()["failed"] == 0
+
+    # 5. the engine ends healthy: post-storm traffic is clean
+    post = spikes_for(rng, 9, 8)
+    rid = engine.submit(post)
+    out = engine.drain()
+    assert_bit_identical(net, report, post, out[rid])
+
+
+def test_chaos_watchdog_discards_stalled_launch():
+    rng = np.random.default_rng(21)
+    net, report = mixed_net([6, 7], rng)
+    injector = FaultInjector(seed=21)
+    engine = ServingEngine(
+        net, report, micro_batch=2, min_bucket_steps=4,
+        fault_injector=injector,
+        watchdog_s=0.2, retry_backoff_s=0.0,
+    )
+    # pre-compile both launch paths so only the injected stall — not a
+    # first-launch compile — can exceed the watchdog budget
+    engine.warmup([6])
+    injector.arm(FaultSpec(kind="stall", times=1, stall_s=0.5))
+    payloads = [spikes_for(rng, 6, 6) for _ in range(2)]
+    rids = [engine.submit(sp) for sp in payloads]
+    replies = engine.drain()
+    # the stalled launch completed *correctly*, but too late to trust:
+    # its result was discarded and the clean retry served instead
+    for rid, sp in zip(rids, payloads):
+        assert_bit_identical(net, report, sp, replies[rid])
+    sup = engine.stats()["supervisor"]
+    assert sup["watchdog_stalls"] == 1
+    assert sup["retries"] == 1
+    assert injector.injected["stall"] == 1
+
+
+def test_chaos_poison_request_bisected_and_quarantined():
+    rng = np.random.default_rng(77)
+    net, report = mixed_net([6, 8, 5], rng, start="parallel")
+    injector = FaultInjector(seed=77)
+    engine = ServingEngine(
+        net, report, micro_batch=4, min_bucket_steps=4,
+        fault_injector=injector, retry_backoff_s=0.0,
+    )
+    payloads = [spikes_for(rng, 7, 6) for _ in range(4)]
+    rids = [engine.submit(sp) for sp in payloads]
+    poison = rids[2]
+    # persistent: every launch carrying the poison request fails
+    injector.arm(FaultSpec(kind="device_lost", request_id=poison,
+                           times=None))
+    replies = engine.drain()
+
+    assert set(replies) == set(rids)
+    fail = replies[poison]
+    assert isinstance(fail, FailedReply) and not fail
+    assert fail.fault_kind == "device_lost"
+    assert fail.request_id == poison
+    for rid, sp in zip(rids, payloads):
+        if rid != poison:
+            assert_bit_identical(net, report, sp, replies[rid])
+
+    stats = engine.stats()
+    assert stats["failed"] == 1
+    assert stats["supervisor"]["bisections"] >= 1
+    assert stats["supervisor"]["quarantined"] == 1
+
+    # the poison payload itself was innocent (the fault was armed against
+    # the request id): resubmitted traffic serves cleanly once disarmed
+    injector.disarm_all()
+    rid = engine.submit(payloads[2])
+    out = engine.drain()
+    assert_bit_identical(net, report, payloads[2], out[rid])
+    assert engine.stats()["failed"] == 1        # cumulative, not re-counted
+
+
+def test_chaos_breaker_trips_routes_around_and_recovers():
+    rng = np.random.default_rng(9)
+    net, report = mixed_net([6, 7], rng)
+    injector = FaultInjector(seed=9)
+    engine = ServingEngine(
+        net, report, micro_batch=2, min_bucket_steps=4,
+        fault_injector=injector,
+        max_launch_retries=0, retry_backoff_s=0.0,
+        breaker_threshold=2, breaker_cooldown_s=0.25,
+    )
+    # the batched path (full buckets' default) persistently fails;
+    # the fused path survives
+    injector.arm(FaultSpec(kind="device_lost", path="batched", times=None))
+
+    def full_bucket_drain():
+        payloads = [spikes_for(rng, 6, 6) for _ in range(2)]
+        rids = [engine.submit(sp) for sp in payloads]
+        replies = engine.drain()
+        for rid, sp in zip(rids, payloads):
+            assert_bit_identical(net, report, sp, replies[rid])
+
+    full_bucket_drain()                 # batched failure 1 -> degraded
+    full_bucket_drain()                 # failure 2 -> breaker trips
+    sup = engine.stats()["supervisor"]
+    assert sup["breaker_trips"] == 1 and sup["open_breakers"] == 1
+    assert sup["degraded_launches"] == 2
+
+    full_bucket_drain()                 # open: routed straight to fused
+    sup = engine.stats()["supervisor"]
+    assert sup["breaker_skips"] >= 1
+    assert sup["degraded_launches"] == 3
+
+    injector.disarm_all()               # the path heals
+    import time
+    time.sleep(0.3)                     # past breaker_cooldown_s
+    full_bucket_drain()                 # half-open probe succeeds
+    sup = engine.stats()["supervisor"]
+    assert sup["breaker_probes"] >= 1
+    assert sup["open_breakers"] == 0
+    assert "open" not in sup["breakers"].values()
+    assert engine.stats()["failed"] == 0    # nothing was ever dropped
+
+
+def test_chaos_async_clients_under_transient_faults():
+    rng = np.random.default_rng(55)
+    net, report = mixed_net([10, 8, 6], rng)
+    injector = FaultInjector(seed=55)
+    engine = ServingEngine(
+        net, report, micro_batch=3, min_bucket_steps=4,
+        fault_injector=injector, retry_backoff_s=0.0005,
+    )
+    injector.arm_plan([
+        FaultSpec(kind="lowering", times=1),
+        FaultSpec(kind="nan_membrane", times=1),
+    ])
+    payloads = [
+        spikes_for(rng, int(rng.integers(2, 10)), 10) for _ in range(9)
+    ]
+
+    async def client():
+        results = await asyncio.gather(*(
+            engine.submit_async(sp) for sp in payloads
+        ))
+        engine.stop()
+        return results
+
+    async def main():
+        server = asyncio.ensure_future(engine.serve_forever())
+        results = await client()
+        await server
+        return results
+
+    results = asyncio.run(main())
+    assert len(results) == len(payloads)    # every future resolved
+    for sp, reply in zip(payloads, results):
+        assert_bit_identical(net, report, sp, reply)
+    sup = engine.stats()["supervisor"]
+    assert sup["retries"] >= 2
+    # the continuous loop and the launch path both heartbeated
+    assert sup["loop_heartbeat_age_s"] is not None
+    assert sup["launch_heartbeat_age_s"] is not None
+    assert sup["dead_hosts"] == []
+
+
+def test_chaos_plan_is_deterministic_given_seed():
+    def storm(seed):
+        rng = np.random.default_rng(seed)
+        net, report = mixed_net([6, 6], rng)
+        injector = FaultInjector(seed=seed)
+        engine = ServingEngine(
+            net, report, micro_batch=2, min_bucket_steps=4,
+            fault_injector=injector, retry_backoff_s=0.0,
+        )
+        injector.arm_plan([
+            FaultSpec(kind="nonbinary_spikes", times=2),
+            FaultSpec(kind="device_lost", times=1),
+        ])
+        payloads = [spikes_for(rng, 5, 6) for _ in range(4)]
+        rids = [engine.submit(sp) for sp in payloads]
+        replies = engine.drain()
+        flat = [
+            np.concatenate([z.ravel() for z in replies[r]]) for r in rids
+        ]
+        return (
+            dict(injector.injected),
+            engine.stats()["supervisor"]["retries"],
+            np.concatenate(flat),
+        )
+
+    inj_a, retries_a, out_a = storm(42)
+    inj_b, retries_b, out_b = storm(42)
+    assert inj_a == inj_b
+    assert retries_a == retries_b
+    np.testing.assert_array_equal(out_a, out_b)

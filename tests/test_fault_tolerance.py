@@ -1,0 +1,114 @@
+"""Unit coverage for the distributed fault-tolerance primitives.
+
+These are the pure-bookkeeping pieces the serving supervisor wires to
+real signals (`HeartbeatRegistry`, `StragglerDetector`, `RestartPolicy`)
+plus the elastic re-mesh planner — all injectable-clock / pure-function,
+so they test deterministically on one host.
+"""
+import pytest
+
+from repro.distributed.fault_tolerance import (
+    HeartbeatRegistry,
+    RestartPolicy,
+    StragglerDetector,
+    plan_elastic_mesh,
+)
+
+
+# -- heartbeats --------------------------------------------------------------
+
+def test_heartbeat_registry_tracks_and_declares_dead():
+    reg = HeartbeatRegistry(timeout_s=10.0)
+    reg.beat(0, now=100.0)
+    reg.beat(1, now=100.0)
+    assert reg.dead_hosts(now=105.0) == []
+    reg.beat(0, now=109.0)              # host 0 keeps beating
+    assert reg.dead_hosts(now=112.0) == [1]
+    reg.beat(1, now=113.0)              # a dead host may come back
+    assert reg.dead_hosts(now=114.0) == []
+
+
+def test_heartbeat_age():
+    reg = HeartbeatRegistry(timeout_s=10.0)
+    assert reg.age(7) is None           # never seen
+    reg.beat(7, now=50.0)
+    assert reg.age(7, now=53.5) == pytest.approx(3.5)
+    reg.beat(7, now=60.0)               # age resets on every beat
+    assert reg.age(7, now=60.0) == pytest.approx(0.0)
+
+
+# -- stragglers --------------------------------------------------------------
+
+def test_straggler_detector_needs_two_hosts():
+    det = StragglerDetector(threshold=1.5)
+    det.record(0, 1.0)
+    assert det.stragglers() == []       # one host has no fleet median
+
+
+def test_straggler_detector_flags_beyond_threshold():
+    det = StragglerDetector(threshold=1.5, ema=0.0)   # ema=0: latest wins
+    for h in range(4):
+        det.record(h, 1.0)
+    det.record(3, 2.0)                  # 2.0 > 1.5 x median(1.0)
+    assert det.stragglers() == [3]
+    det.record(3, 1.0)                  # recovers once its time drops
+    assert det.stragglers() == []
+
+
+def test_straggler_detector_ema_smooths_single_spike():
+    det = StragglerDetector(threshold=1.5, ema=0.9)
+    for _ in range(10):
+        for h in range(3):
+            det.record(h, 1.0)
+    det.record(1, 3.0)                  # one spike, EMA absorbs most of it
+    assert det.stragglers() == []
+    for _ in range(20):                 # a persistent drift does flag
+        det.record(1, 3.0)
+    assert det.stragglers() == [1]
+
+
+# -- restart policy ----------------------------------------------------------
+
+def test_restart_policy_exponential_backoff():
+    pol = RestartPolicy(max_retries=3, backoff_s=0.5)
+    assert [pol.next_delay(a) for a in range(4)] == [0.5, 1.0, 2.0, 4.0]
+
+
+def test_restart_policy_retry_budget_boundary():
+    pol = RestartPolicy(max_retries=2)
+    assert pol.should_restart(0) and pol.should_restart(1)
+    assert not pol.should_restart(2)    # attempt == max_retries: stop
+
+
+# -- elastic re-mesh ---------------------------------------------------------
+
+def test_plan_elastic_mesh_raises_when_model_group_impossible():
+    with pytest.raises(RuntimeError, match="cannot form"):
+        plan_elastic_mesh(3, model_parallel=4)
+
+
+def test_plan_elastic_mesh_keeps_pod_axis_when_divisible():
+    shape, names = plan_elastic_mesh(32, model_parallel=4, pods_preferred=2)
+    assert names == ("pod", "data", "model")
+    assert shape == (2, 4, 4)
+
+
+def test_plan_elastic_mesh_drops_pod_axis_for_small_survivor_sets():
+    # 3 groups of 4: not divisible by 2 pods -> 2-axis mesh
+    shape, names = plan_elastic_mesh(12, model_parallel=4, pods_preferred=2)
+    assert names == ("data", "model")
+    assert shape == (3, 4)
+    # 4 groups but < 2*pods_preferred per pod requirement boundary:
+    shape, names = plan_elastic_mesh(8, model_parallel=4, pods_preferred=2)
+    assert names == ("data", "model") and shape == (2, 4)
+
+
+def test_plan_elastic_mesh_model_axis_always_intact():
+    for chips in (4, 5, 7, 16, 33):
+        shape, names = plan_elastic_mesh(chips, model_parallel=4)
+        assert shape[names.index("model")] == 4
+        # never plans more chips than survive
+        total = 1
+        for d in shape:
+            total *= d
+        assert total <= chips
