@@ -1,0 +1,134 @@
+"""Placement benchmark: searched mapping vs naive round-robin.
+
+Tiles each fixture graph onto the core grid, places it twice — the
+greedy + local-search mapper vs the round-robin baseline — and compares
+estimated NoC cut traffic (spikes x hops per timestep, the mapper's
+objective).  The acceptance property of the placement engine is that the
+search wins on every fixture; ``tests/test_placement.py`` pins it as a
+test and this benchmark quantifies it, merging a ``placement`` section
+into ``BENCH_network.json``:
+
+    {"placement": {"<fixture>": {"round_robin": ..., "greedy": ...,
+                                 "refined": ..., "improvement": ...,
+                                 "search_us": ...}}}
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import Population, random_projection
+from repro.core.hw import DEFAULT_S2
+from repro.core.layer import LIFParams, SNNNetwork
+from repro.placement import (
+    CoreGrid, estimate_traffic, greedy_place, refine, round_robin_place,
+    tile_network,
+)
+
+from .common import csv_row, timeit
+
+_JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_network.json"
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+#: Fixture graphs: (populations, projections, seed, tile budget).  Both
+#: are recurrent; "ring" adds a larger population mix so round-robin's
+#: locality blindness costs more.
+FIXTURES = {
+    "recurrent-mlp": (
+        [("in", 24), ("h1", 40), ("h2", 36), ("out", 10)],
+        [("in", "h1", 0.3, 2), ("h1", "h2", 0.3, 2), ("h2", "h1", 0.2, 3),
+         ("h2", "h2", 0.2, 2), ("h2", "out", 0.5, 2)],
+        11, 10,
+    ),
+    "ring": (
+        [("in", 20), ("a", 30), ("b", 30), ("c", 30)],
+        [("in", "a", 0.3, 2), ("a", "b", 0.3, 2), ("b", "c", 0.3, 2),
+         ("c", "a", 0.3, 2), ("c", "c", 0.15, 3)],
+        22, 8,
+    ),
+}
+
+
+def _merge_json(update: dict) -> None:
+    data = {}
+    if _JSON_PATH.exists():
+        try:
+            data = json.loads(_JSON_PATH.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data.update(update)
+    _JSON_PATH.write_text(json.dumps(data, indent=2) + "\n")
+
+
+def _build(name):
+    pop_spec, proj_spec, seed, budget = FIXTURES[name]
+    rng = np.random.default_rng(seed)
+    pops = {n: Population(n, s) for n, s in pop_spec}
+    projs = []
+    for pre, post, density, delay_range in proj_spec:
+        p = random_projection(
+            pops[pre], pops[post], density, delay_range,
+            seed=int(rng.integers(0, 2**31)),
+        )
+        p.lif = LIF
+        projs.append(p)
+    net = SNNNetwork(
+        populations=list(pops.values()), projections=projs, name=name,
+    )
+    return tile_network(net, max_neurons=budget)
+
+
+def run() -> dict:
+    section = {}
+    for name in FIXTURES:
+        tiled = _build(name)
+        # cap each core at ~2 tiles so the mapper must actually spread
+        # (with the full 255-neuron budget everything co-locates and both
+        # placers trivially reach zero cut traffic); the untiled input
+        # population sets the floor — it must still fit somewhere
+        biggest = max(s.size for s in tiled.tile_slices.values())
+        hw = dataclasses.replace(
+            DEFAULT_S2, max_neurons_per_pe=biggest + tiled.max_neurons
+        )
+        grid = CoreGrid(rows=4, cols=4, hw=hw)
+        traffic = estimate_traffic(tiled)
+        rr = round_robin_place(tiled, grid, traffic)
+        greedy = greedy_place(tiled, grid, traffic)
+        refined = refine(greedy, tiled, grid, traffic)
+        us = timeit(
+            lambda: refine(
+                greedy_place(tiled, grid, traffic), tiled, grid, traffic
+            ),
+            warmup=1, iters=5,
+        )
+        assert refined.cost < rr.cost, (
+            f"{name}: search ({refined.cost:.2f}) must beat round-robin "
+            f"({rr.cost:.2f})"
+        )
+        improvement = 1.0 - refined.cost / rr.cost if rr.cost else 0.0
+        section[name] = {
+            "tiles": len(tiled.network.populations),
+            "blocks": len(tiled.network.projections),
+            "round_robin": round(rr.cost, 3),
+            "greedy": round(greedy.cost, 3),
+            "refined": round(refined.cost, 3),
+            "improvement": round(improvement, 4),
+            "search_us": round(us, 1),
+        }
+        csv_row(
+            f"placement_{name}", us,
+            f"cut traffic rr={rr.cost:.1f} -> search={refined.cost:.1f} "
+            f"(-{improvement:.0%})",
+        )
+    _merge_json({"placement": section})
+    return section
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -12,6 +12,8 @@
   batching -> bench_network.run_batch_sweep (serial kernel forms vs parallel
               across batch 1/4/16/64 -> BENCH_network.json "batch_sweep")
   serving  -> bench_serving          (batched Poisson serving -> BENCH_serving.json)
+  placement-> bench_placement        (NoC cut traffic: search vs round-robin
+              -> BENCH_network.json "placement")
 
 ``PYTHONPATH=src python -m benchmarks.run [--fast] [--seeds N]``
 """
@@ -37,6 +39,7 @@ def main() -> None:
         bench_kernels,
         bench_marginals,
         bench_network,
+        bench_placement,
         bench_serving,
         bench_switching,
     )
@@ -54,6 +57,7 @@ def main() -> None:
     bench_network.run_batch_sweep()
     bench_network.run_donation()
     bench_serving.run()
+    bench_placement.run()
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
 
 

@@ -10,10 +10,20 @@ Two hardware descriptions live here:
 * :class:`TPUv5eConfig` — the roofline target for the JAX/Pallas runtimes and
   the LM substrate.  Constants from the task spec: 197 TFLOP/s bf16 per chip,
   819 GB/s HBM, ~50 GB/s per ICI link.
+
+Plus the **aggregate per-core accounting** the placement engine packs
+against (:class:`PEBudget` / :class:`PEUsage`).  The paradigm compilers
+check each projection against the DTCM *independently* — correct for the
+paper's one-projection-per-PE-group mapping, but silently wrong the moment
+two projections (or a tile's neurons and several in-projections) share a
+core: each can fit alone while their sum over-commits the SRAM.
+:func:`check_core` is the shared-core check; everything placed on one PE
+must fit **jointly**, with the OS overhead booked exactly once per core.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,3 +79,115 @@ class TPUv5eConfig:
 
 DEFAULT_S2 = SpiNNaker2Config()
 DEFAULT_TPU = TPUv5eConfig()
+
+
+class BudgetExceeded(ValueError):
+    """A core's aggregate load over-commits one of its budgets."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PEBudget:
+    """What one PE can hold — the limits aggregate loads are packed against.
+
+    ``dtcm_bytes`` is the *usable* synapse/structure budget: the fixed OS
+    overhead is subtracted once per core here, so loads never book it
+    themselves (the pre-aggregate accounting double-counted it whenever two
+    projections were sized for the same PE independently).
+    """
+
+    max_neurons: int
+    dtcm_bytes: float
+    #: Distinct in-projections (routing-table entries / DMA streams) one
+    #: core can serve; SpiNNaker2's router has 1k entries chip-wide over
+    #: 152 PEs, so a handful of multicast trees per core is the realistic
+    #: regime — kept generous by default and tightened by tests.
+    max_fan_in: int = 128
+
+    @classmethod
+    def from_config(
+        cls, hw: SpiNNaker2Config = DEFAULT_S2, *, max_fan_in: int = 128
+    ) -> "PEBudget":
+        return cls(
+            max_neurons=hw.max_neurons_per_pe,
+            dtcm_bytes=float(hw.dtcm_bytes - hw.os_overhead_bytes),
+            max_fan_in=max_fan_in,
+        )
+
+
+@dataclasses.dataclass
+class PEUsage:
+    """Aggregate load on one PE: neurons + synapse memory + fan-in.
+
+    One ``PEUsage`` accumulates *everything* sharing the core — a tile's
+    neuron state plus the synaptic structures of every projection
+    targeting it — so the fit check sees the joint footprint, not each
+    contribution in isolation.
+    """
+
+    neurons: int = 0
+    synapse_bytes: float = 0.0
+    fan_in: int = 0
+
+    def add(
+        self, *, neurons: int = 0, synapse_bytes: float = 0.0, fan_in: int = 0
+    ) -> "PEUsage":
+        self.neurons += neurons
+        self.synapse_bytes += synapse_bytes
+        self.fan_in += fan_in
+        return self
+
+    def merge(self, other: "PEUsage") -> "PEUsage":
+        return self.add(
+            neurons=other.neurons,
+            synapse_bytes=other.synapse_bytes,
+            fan_in=other.fan_in,
+        )
+
+    def overcommits(self, budget: PEBudget) -> Tuple[str, ...]:
+        """The budget dimensions this load exceeds (empty = it fits)."""
+        over = []
+        if self.neurons > budget.max_neurons:
+            over.append("neurons")
+        if self.synapse_bytes > budget.dtcm_bytes:
+            over.append("dtcm")
+        if self.fan_in > budget.max_fan_in:
+            over.append("fan_in")
+        return tuple(over)
+
+    def fits(self, budget: PEBudget) -> bool:
+        return not self.overcommits(budget)
+
+
+def aggregate_pe_usage(loads: Iterable[PEUsage]) -> PEUsage:
+    """The joint footprint of every load sharing one core."""
+    total = PEUsage()
+    for load in loads:
+        total.merge(load)
+    return total
+
+
+def check_core(
+    loads: Iterable[PEUsage],
+    budget: PEBudget,
+    *,
+    core: object = None,
+) -> PEUsage:
+    """Raise :class:`BudgetExceeded` unless the loads fit *jointly*.
+
+    This is the shared-core fix: projections that each pass their own
+    per-projection DTCM check can still over-commit a core together, and
+    only the aggregate reveals it.  Returns the aggregate on success.
+    """
+    total = aggregate_pe_usage(loads)
+    over = total.overcommits(budget)
+    if over:
+        where = "" if core is None else f"core {core}: "
+        raise BudgetExceeded(
+            f"{where}aggregate load (neurons={total.neurons}, "
+            f"synapse_bytes={total.synapse_bytes:.0f}, "
+            f"fan_in={total.fan_in}) exceeds {', '.join(over)} budget "
+            f"(max_neurons={budget.max_neurons}, "
+            f"dtcm_bytes={budget.dtcm_bytes:.0f}, "
+            f"max_fan_in={budget.max_fan_in})"
+        )
+    return total

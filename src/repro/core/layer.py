@@ -260,6 +260,14 @@ class SNNNetwork:
     spike crossing a back-edge of synaptic delay ``d`` arrives ``d + 1``
     steps after emission.
 
+    ``forced_back_edges`` (graph form only) lists projection indices that
+    must be treated as back-edges regardless of where their endpoints land
+    in the topological order.  The tiling pass
+    (:mod:`repro.placement.tiling`) uses this to keep every block of a
+    tiled back-edge on the one-step-delayed feedback path — blocks of a
+    tiled self-loop connect tile pairs in both directions, which no total
+    order could classify uniformly on its own.
+
     Exactly one population may have no incoming projections — it is the
     **input population** driven by the external spike train.
 
@@ -276,15 +284,19 @@ class SNNNetwork:
         *,
         populations: Optional[Sequence[Population]] = None,
         projections: Optional[Sequence[SNNLayer]] = None,
+        forced_back_edges: Optional[Sequence[int]] = None,
     ):
         self.name = name
         self._graph_built = False
+        self._forced_back: FrozenSet[int] = frozenset(forced_back_edges or ())
         if layers is not None:
             if populations is not None or projections is not None:
                 raise ValueError(
                     "pass either layers= (chain) or populations=/"
                     "projections= (graph), not both"
                 )
+            if self._forced_back:
+                raise ValueError("forced_back_edges needs the graph form")
             if not layers:
                 raise ValueError("a chain network needs at least one layer")
             self._projections: List[SNNLayer] = list(layers)
@@ -422,8 +434,22 @@ class SNNNetwork:
     def _order_graph(self) -> None:
         n = len(self._populations)
         idx = self._pop_index
+        if self._forced_back - set(range(len(self._projections))):
+            raise ValueError(
+                f"forced_back_edges {sorted(self._forced_back)} out of "
+                f"range for {len(self._projections)} projections"
+            )
         preds: List[set] = [set() for _ in range(n)]
-        for pre, post in self._endpoints:
+        for i, (pre, post) in enumerate(self._endpoints):
+            # edges declared (forced) as back-edges never constrain the
+            # topological order — they are routed through the one-step
+            # feedback ring whatever positions their endpoints land on,
+            # exactly like auto-detected cycle breaks.  The tiling pass
+            # relies on this: blocks of a tiled self-loop span tile pairs
+            # in BOTH directions, which no total order could classify
+            # uniformly without the override.
+            if i in self._forced_back:
+                continue
             s, t = idx[pre], idx[post]
             if s != t:
                 preds[t].add(s)
@@ -450,7 +476,7 @@ class SNNNetwork:
             order.append(pick)
         self._topo_order: Tuple[int, ...] = tuple(order)
         self._topo_pos = {p: k for k, p in enumerate(order)}
-        self._back_edges: FrozenSet[int] = frozenset(
+        self._back_edges: FrozenSet[int] = self._forced_back | frozenset(
             i for i, (pre, post) in enumerate(self._endpoints)
             if self._topo_pos[idx[post]] <= self._topo_pos[idx[pre]]
         )

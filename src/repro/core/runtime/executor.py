@@ -547,7 +547,13 @@ class NetworkExecutable:
         """The mesh params are placed on (None = single-device identity)."""
         return self._mesh
 
-    def shard(self, mesh=None, rules: dict | None = None) -> "NetworkExecutable":
+    def shard(
+        self,
+        mesh=None,
+        rules: dict | None = None,
+        *,
+        assignment=None,
+    ) -> "NetworkExecutable":
         """Place the lowered operands by the SNN logical-axis rules.
 
         Routes every projection's weight/delay operands through
@@ -557,7 +563,32 @@ class NetworkExecutable:
         ``None``) this is the **identity fallback**: no placement happens
         and outputs are unchanged — CPU CI exercises the same call.
         Returns ``self`` for chaining.
+
+        ``assignment`` switches to **placement-driven** sharding: a
+        :class:`repro.placement.DeviceAssignment` (from
+        ``build_device_assignment`` on a placed, tiled network) pins each
+        projection's operands to the device its target tile landed on,
+        replacing the blanket logical-axis rules.  The assignment is
+        recorded in ``report.placement``; on one device the put is the
+        identity, so the path runs end-to-end on CPU CI.
         """
+        if assignment is not None:
+            if len(assignment.proj_device) != len(self.metas):
+                raise ValueError(
+                    f"assignment covers {len(assignment.proj_device)} "
+                    f"projections; executable has {len(self.metas)}"
+                )
+            self.params = [
+                tuple(shardlib.placement_put(arr, dev) for arr in p)
+                for dev, p in zip(assignment.proj_device, self.params)
+            ]
+            self._mesh = None      # device pinning replaces mesh placement
+            self._rules = None
+            self._dense.clear()
+            self._fns.clear()
+            if self.report is not None:
+                self.report.placement = assignment
+            return self
         mesh = shardlib.snn_mesh() if mesh is None else mesh
         self._rules = rules or shardlib.snn_rules()
         self._mesh = mesh

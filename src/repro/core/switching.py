@@ -91,6 +91,14 @@ class CompileReport:
     serial_forms: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )
+    #: The :class:`repro.placement.DeviceAssignment` the executable was
+    #: sharded with (``shard(assignment=...)``), or ``None`` when no
+    #: placement-driven sharding happened.  On single-device CI this is
+    #: the identity assignment — recorded all the same, so the full
+    #: placement -> sharding path is observable without hardware.
+    placement: object = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def total_pes(self) -> int:

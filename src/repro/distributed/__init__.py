@@ -1,6 +1,7 @@
+from .compat import compat_shard_map
 from .sharding import (
-    constrain, make_rules, sharding_ctx, snn_mesh, snn_rules, spec_for,
-    spec_for_shape, tree_shardings,
+    constrain, make_rules, placement_put, sharding_ctx, snn_mesh, snn_rules,
+    spec_for, spec_for_shape, tree_shardings,
 )
 from .fault_tolerance import (
     FaultTolerantDriver, HeartbeatRegistry, HostFailure, RestartPolicy,

@@ -48,31 +48,29 @@ def make_rules(*, fsdp: bool = False, multi_pod: bool = False,
     }
 
 
-def compat_shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
-                     axis_names=None):
-    """``jax.shard_map`` across jax versions.
+# The version shim lives in .compat; re-exported here because call sites
+# historically imported it from this module.
+from .compat import compat_shard_map  # noqa: F401
 
-    Newer jax exposes ``jax.shard_map(..., check_vma=, axis_names=)``;
-    older releases only have ``jax.experimental.shard_map.shard_map``
-    with ``check_rep=`` and an ``auto=`` set (the complement of the
-    manual ``axis_names``).  Callers write the new-API kwargs; this shim
-    translates when the old API is what's installed.
+
+def placement_put(arr, device_index: int):
+    """Pin an array to one device by index — the placement engine's put.
+
+    The placement -> sharding bridge (:mod:`repro.placement.partition`)
+    assigns every tiled projection a device; this is the primitive that
+    realizes the assignment.  On a single visible device it is the
+    **identity** (the same fallback contract as :func:`snn_mesh`
+    returning ``None``), so CPU CI drives the full placement path with no
+    actual data movement.
     """
-    if hasattr(jax, "shard_map"):
-        kw = {"check_vma": check_vma}
-        if axis_names is not None:
-            kw["axis_names"] = axis_names
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    devices = jax.devices()
+    if len(devices) <= 1:
+        return arr
+    if not 0 <= device_index < len(devices):
+        raise ValueError(
+            f"device index {device_index} outside 0..{len(devices) - 1}"
         )
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    kw = {"check_rep": check_vma}
-    if axis_names is not None:
-        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
-    return _shard_map(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
-    )
+    return jax.device_put(arr, devices[device_index])
 
 
 def snn_rules() -> dict:

@@ -133,7 +133,7 @@ def make_train_step_compressed(cfg: ModelConfig, opt_cfg: AdamWConfig,
         batch_specs = jax.tree.map(lambda _: P("pod"), batch)
         # check_vma=False: the ppermute-ring sum is pod-invariant by
         # construction, but that is not statically provable
-        from ..distributed.sharding import compat_shard_map
+        from ..distributed.compat import compat_shard_map
         return compat_shard_map(
             inner, mesh=mesh,
             in_specs=(P(), P(), batch_specs),

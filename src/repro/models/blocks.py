@@ -338,7 +338,7 @@ def moe_forward_local(p: dict, x: jnp.ndarray, cfg: ModelConfig):
         y = jax.lax.psum(y, model_axes[0])   # assemble across expert shards
         return y.reshape(bl, sl, d)
 
-    from ..distributed.sharding import compat_shard_map
+    from ..distributed.compat import compat_shard_map
     return compat_shard_map(
         local_block, mesh=mesh,
         in_specs=(x_spec, P_(None, None), ew_spec, ew_spec, ewd_spec),

@@ -140,7 +140,7 @@ class TestOptim:
         def f(g):
             return psum_compressed(g, "data")
 
-        from repro.distributed.sharding import compat_shard_map
+        from repro.distributed.compat import compat_shard_map
 
         out = jax.jit(
             compat_shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P())

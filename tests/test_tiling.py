@@ -1,0 +1,247 @@
+"""Tiling round-trip: the rewritten graph is the same network.
+
+The pass splits oversized populations into per-core tiles and every
+projection into block sub-projections; these tests pin the property the
+whole placement engine rests on — the tiled graph's spike trains,
+assembled back to the original view, are **bit-identical** to the
+untiled network on every launch path, including recurrent/back-edge
+geometries where block classification is the subtle part (a tiled
+self-loop's blocks connect tile pairs in both directions and must all
+ride the feedback ring).
+"""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import Population, SwitchingCompiler, random_projection
+from repro.core.layer import LIFParams, SNNNetwork
+from repro.core.runtime import network_executable, run_graph_reference
+from repro.core.switching import CompileReport
+from repro.placement import TiledNetwork, tile_network
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+#: Recurrent geometries (same shapes as the equivalence harness) plus a
+#: feed-forward chain with a population large enough to force tiling at
+#: the real 255-neuron budget.  Spec: (populations, projections, seed).
+GEOMETRIES = {
+    "self-loop": (
+        [("in", 14), ("h", 18), ("out", 9)],
+        [("in", "h", 0.4, 2), ("h", "h", 0.3, 3), ("h", "out", 0.5, 2)],
+        1606,
+    ),
+    "long-back-edge": (
+        [("in", 12), ("a", 16), ("b", 13), ("out", 8)],
+        [("in", "a", 0.4, 2), ("a", "b", 0.4, 1), ("b", "a", 0.35, 2),
+         ("b", "out", 0.5, 3)],
+        1707,
+    ),
+    "skip-and-loop": (
+        [("in", 15), ("h1", 14), ("h2", 12), ("out", 7)],
+        [("in", "h1", 0.4, 2), ("h1", "h2", 0.4, 2), ("in", "h2", 0.3, 1),
+         ("h2", "h2", 0.3, 2), ("h2", "out", 0.5, 2), ("out", "h1", 0.3, 1)],
+        1808,
+    ),
+    "wide-chain": (
+        [("in", 20), ("big", 300), ("out", 11)],
+        [("in", "big", 0.15, 2), ("big", "out", 0.1, 3)],
+        1909,
+    ),
+}
+
+#: Per-geometry neuron budget: small enough that every hidden population
+#: splits.  "wide-chain" uses the real SpiNNaker2 default (255), so one
+#: fixture exercises tiling at the paper's actual per-PE capacity.
+BUDGETS = {"self-loop": 7, "long-back-edge": 6, "skip-and-loop": 5,
+           "wide-chain": None}
+
+_CACHE = {}
+
+
+def build_net(name):
+    pop_spec, proj_spec, seed = GEOMETRIES[name]
+    rng = np.random.default_rng(seed)
+    pops = {n: Population(n, s) for n, s in pop_spec}
+    projs = []
+    for pre, post, density, delay_range in proj_spec:
+        p = random_projection(
+            pops[pre], pops[post], density, delay_range,
+            seed=int(rng.integers(0, 2**31)),
+            delay_granularity=rng.choice(["source", "synapse"]),
+        )
+        p.lif = LIF
+        projs.append(p)
+    return SNNNetwork(
+        populations=list(pops.values()), projections=projs, name=name,
+    ), rng
+
+
+def _fixture(name):
+    if name in _CACHE:
+        return _CACHE[name]
+    net, rng = build_net(name)
+    tiled = tile_network(net, max_neurons=BUDGETS[name])
+    assert tiled.was_tiled, name
+    tn = tiled.network
+    paradigms = ["serial" if i % 2 else "parallel"
+                 for i in range(len(tn.projections))]
+    report = CompileReport(layers=[
+        SwitchingCompiler(p).compile_layer(l)
+        for p, l in zip(paradigms, tn.layers)
+    ])
+    exe = network_executable(tn, report)
+    spikes = (rng.random((12, 3, net.n_input)) < 0.3).astype(np.float32)
+    want = run_graph_reference(net, spikes)
+    _CACHE[name] = (net, tiled, exe, spikes, want)
+    return _CACHE[name]
+
+
+def _launch(exe, path, spikes):
+    if path == "fused":
+        return exe.run(spikes)
+    if path == "vmap":
+        return exe.run(spikes, batched=True)
+    if path == "sharded":
+        exe.shard()                      # identity fallback on 1 device
+        return exe.run(spikes)
+    if path == "solo":
+        return [
+            np.concatenate(
+                [exe.run(spikes[:, b : b + 1])[i]
+                 for b in range(spikes.shape[1])],
+                axis=1,
+            )
+            for i in range(len(exe.metas))
+        ]
+    raise AssertionError(path)
+
+
+@pytest.mark.parametrize("path", ["solo", "fused", "vmap", "sharded"])
+@pytest.mark.parametrize("geometry", sorted(GEOMETRIES))
+def test_tiled_bit_identical_to_untiled_reference(geometry, path):
+    """Tiled network, assembled back, == untiled brute-force oracle on
+    every launch path (the acceptance criterion of the placement PR)."""
+    net, tiled, exe, spikes, want = _fixture(geometry)
+    got = tiled.assemble(_launch(exe, path, spikes))
+    assert len(got) == len(net.projections)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("geometry", sorted(GEOMETRIES))
+def test_tile_bookkeeping_inverts(geometry):
+    """Tiles partition each population contiguously; blocks partition
+    each projection; back-edge blocks are exactly the blocks of original
+    back-edges."""
+    net, tiled, _, _, _ = _fixture(geometry)
+    tn = tiled.network
+    for p in net.populations:
+        slices = [tiled.tile_slices[t] for t in tiled.tiles_of[p.name]]
+        assert slices[0].start == 0
+        for a, b in zip(slices, slices[1:]):
+            assert b.start == a.start + a.size
+        assert slices[-1].start + slices[-1].size == p.size
+        assert all(s.population == p.name for s in slices)
+    covered = sorted(j for blocks in tiled.blocks_of for j in blocks)
+    assert covered == list(range(len(tn.projections)))
+    back_blocks = set()
+    for ei in net.back_edges:
+        back_blocks.update(tiled.blocks_of[ei])
+    assert back_blocks == set(tn.back_edges)
+
+
+def test_untiled_network_is_identity():
+    """A network already within budget round-trips through the pass as a
+    single-tile identity — same populations, same projections."""
+    net, _ = build_net("self-loop")
+    tiled = tile_network(net)            # default 255-neuron budget
+    assert not tiled.was_tiled
+    assert [p.name for p in tiled.network.populations] == [
+        p.name for p in net.populations
+    ]
+    assert len(tiled.network.projections) == len(net.projections)
+    assert tiled.network.back_edges == net.back_edges
+    spikes = np.zeros((4, 1, net.n_input), np.float32)
+    outs = [np.zeros((4, 1, l.n_target), np.float32) for l in net.layers]
+    assembled = tiled.assemble(outs)
+    for a, b in zip(assembled, outs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_forced_back_edges_validation():
+    """forced_back_edges rejects out-of-range indices and the chain form."""
+    net, _ = build_net("self-loop")
+    with pytest.raises(ValueError):
+        SNNNetwork(
+            populations=net.populations,
+            projections=net.projections,
+            forced_back_edges=[99],
+        )
+    from repro.core import random_layer
+
+    layer = random_layer(6, 5, 0.5, 2, seed=3)
+    with pytest.raises(ValueError):
+        SNNNetwork(layers=[layer], forced_back_edges=[0])
+
+
+def test_tile_usage_accounts_every_in_block():
+    """A tile's PEUsage books its neurons once and one fan-in entry per
+    in-block."""
+    _, tiled, _, _, _ = _fixture("self-loop")
+    tn = tiled.network
+    for p_idx, p in enumerate(tn.populations):
+        if p_idx == tn.input_index:
+            continue
+        u = tiled.tile_usage(p.name)
+        assert u.neurons == tiled.tile_slices[p.name].size
+        assert u.fan_in == len(tn.in_edges[p_idx])
+        assert u.synapse_bytes > 0
+
+
+# -- random_projection seed determinism ---------------------------------------
+
+_HASH_SNIPPET = """
+import hashlib
+import numpy as np
+from repro.core import Population, random_projection
+
+p = random_projection(
+    Population("a", 23), Population("b", 17), 0.4, 5,
+    seed=12345, delay_granularity="synapse",
+)
+h = hashlib.sha256()
+h.update(np.ascontiguousarray(p.weights).tobytes())
+h.update(np.ascontiguousarray(p.delays).tobytes())
+print(h.hexdigest())
+"""
+
+
+def test_random_projection_seed_determinism_across_processes():
+    """Same seed -> byte-identical weights and delays in *separate*
+    interpreter processes (PYTHONHASHSEED salting must not leak into the
+    generator), and a different seed diverges."""
+    def run(snippet):
+        return subprocess.run(
+            [sys.executable, "-c", snippet],
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+
+    h1 = run(_HASH_SNIPPET)
+    h2 = run(_HASH_SNIPPET)
+    assert h1 == h2 and len(h1) == 64
+    h3 = run(_HASH_SNIPPET.replace("seed=12345", "seed=54321"))
+    assert h3 != h1
+
+
+def test_random_projection_seed_determinism_in_process():
+    """Two in-process builds from one seed are byte-identical."""
+    a = Population("a", 19)
+    b = Population("b", 13)
+    p1 = random_projection(a, b, 0.5, 3, seed=777)
+    p2 = random_projection(a, b, 0.5, 3, seed=777)
+    np.testing.assert_array_equal(p1.weights, p2.weights)
+    np.testing.assert_array_equal(p1.delays, p2.delays)
+    p3 = random_projection(a, b, 0.5, 3, seed=778)
+    assert not np.array_equal(p1.weights, p3.weights)
