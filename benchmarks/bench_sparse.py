@@ -1,0 +1,166 @@
+"""Sparse (ELL gather) vs event vs dense serial kernels across scale.
+
+Sweeps network size 1k -> 50k neurons at SpiNNCer-like densities and
+times every serial kernel form that lawfully exists at each point — the
+dense matmul drops out once the ``(d_slots, S, T)`` operand crosses
+:data:`~repro.core.layer.DENSE_ELEMENT_CAP`, which is exactly the regime
+the CSR storage exists for.  Two invariants are asserted, not just
+recorded:
+
+* at 0.1% density the sparse form beats the dense matmul from the
+  pinned size up (the dense form pays for every zero; the gather pays
+  per synapse);
+* the cost model never picks the dense form for a net whose dense
+  operand may not exist (sparse-only nets), however large the batch.
+
+Merged into ``BENCH_network.json`` under ``"sparse_sweep"`` so the perf
+trajectory is tracked across PRs.
+
+``PYTHONPATH=src python -m benchmarks.bench_sparse [--fast]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import Population, SwitchingCompiler
+from repro.core.layer import LIFParams, SNNNetwork, random_sparse_projection
+from repro.core.runtime import network_executable
+from repro.core.switching import CompileReport
+
+from .common import csv_row, timeit
+
+_JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_network.json"
+
+#: Above this size at 0.1% density the sparse form must beat dense
+#: (where dense still fits at all) — pinned so regressions are loud.
+PINNED_SPARSE_WIN_SIZE = 2000
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+
+def _merge_json(update: dict) -> None:
+    """Update ``BENCH_network.json`` in place, keeping other sections."""
+    data = {}
+    if _JSON_PATH.exists():
+        try:
+            data = json.loads(_JSON_PATH.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data.update(update)
+    _JSON_PATH.write_text(json.dumps(data, indent=2) + "\n")
+
+
+def _sparse_net(size: int, density: float, delay_range: int, seed: int):
+    a = Population(f"sw{size}.a", size)
+    b = Population(f"sw{size}.b", size)
+    proj = random_sparse_projection(a, b, density, delay_range, seed=seed)
+    proj.lif = LIF
+    net = SNNNetwork(populations=[a, b], projections=[proj],
+                     name=f"sparse-{size}-{density}")
+    report = CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(proj)]
+    )
+    return net, report
+
+
+def run(*, fast: bool = False, steps: int | None = None,
+        batch: int = 4) -> dict:
+    """Density x size sweep of the three serial kernel forms."""
+    print("\n# sparse kernel sweep (event / sparse / dense across scale)")
+    steps = steps or (4 if fast else 10)
+    delay_range = 1
+    # (size, density) points: the 0.1%-density ramp 1k -> 50k plus two
+    # denser points where the dense matmul is still the right answer
+    points_spec = [(1000, 0.001), (2000, 0.001), (5000, 0.001)]
+    if not fast:
+        points_spec += [(20_000, 0.001), (50_000, 0.001)]
+    points_spec += [(1000, 0.01)] if fast else [(1000, 0.01), (2000, 0.01)]
+
+    sweep = {
+        "steps": steps, "batch": batch, "delay_range": delay_range,
+        "fast": fast, "points": [],
+    }
+    iters = 2 if fast else 3
+    for i, (size, density) in enumerate(points_spec):
+        net, report = _sparse_net(size, density, delay_range, seed=1000 + i)
+        exe = network_executable(net, report)
+        m = exe.metas[0]
+        fits = exe.cost_model.dense_fits(
+            m.n_source, m.n_target, m.delay_range
+        )
+        rng = np.random.default_rng(i)
+        spikes = (rng.random((steps, batch, size)) < 0.1).astype(np.float32)
+        row = {
+            "size": size, "density": density,
+            "n_synapses": net.projections[0].n_synapses,
+            "dense_fits": fits,
+        }
+        forms = ["event", "sparse"] + (["dense"] if fits else [])
+        for form in forms:
+            us = timeit(
+                lambda: jax.block_until_ready(
+                    exe.run_device(spikes, serial_form=form)
+                ),
+                warmup=1, iters=iters,
+            )
+            row[f"{form}_us"] = us
+            csv_row(f"sparse_sweep_{form}_n{size}_d{density}", us,
+                    f"batch_timesteps_per_s={steps * batch / (us / 1e6):.0f}")
+        exe.run_device(spikes)            # auto: let the cost model pick
+        row["auto_form"] = report.serial_forms[("fused", batch)][0]
+        row["choose_form"] = exe.cost_model.choose_form(
+            m.n_rows, m.n_source, m.n_target, m.delay_range, batch
+        )
+        # a net whose dense operand may not exist must never pick dense —
+        # at this batch or any other
+        if not fits:
+            assert row["auto_form"] != "dense", row
+            for huge in (1, 64, 4096):
+                assert exe.cost_model.choose_form(
+                    m.n_rows, m.n_source, m.n_target, m.delay_range, huge
+                ) != "dense", (row, huge)
+        sweep["points"].append(row)
+
+    # pinned regression: sparse beats dense from the pinned size up at
+    # 0.1% density, wherever dense exists to be beaten
+    contested = [
+        r for r in sweep["points"]
+        if r["density"] == 0.001 and r["dense_fits"]
+        and r["size"] >= PINNED_SPARSE_WIN_SIZE
+    ]
+    assert contested, "sweep lost its pinned comparison point"
+    for r in contested:
+        assert r["sparse_us"] < r["dense_us"], (
+            f"sparse form lost to dense at size {r['size']}, "
+            f"density {r['density']}: {r['sparse_us']:.0f}us vs "
+            f"{r['dense_us']:.0f}us"
+        )
+    sweep["pinned_win_size"] = PINNED_SPARSE_WIN_SIZE
+    sweep["sparse_vs_dense_at_pin"] = (
+        contested[0]["dense_us"] / contested[0]["sparse_us"]
+    )
+    _merge_json({"sparse_sweep": sweep})
+    print(
+        f"wrote {_JSON_PATH.name} sparse_sweep (sparse "
+        f"{sweep['sparse_vs_dense_at_pin']:.1f}x faster than dense at "
+        f"size {PINNED_SPARSE_WIN_SIZE}, density 0.001)"
+    )
+    return sweep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small sizes / fewer iters (CI)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,9 @@
   runtime  -> bench_network          (fused single-scan vs per-layer -> BENCH_network.json)
   batching -> bench_network.run_batch_sweep (serial kernel forms vs parallel
               across batch 1/4/16/64 -> BENCH_network.json "batch_sweep")
+  sparse   -> bench_sparse             (event/sparse/dense kernel forms across
+              size 1k-50k at SpiNNCer densities -> BENCH_network.json
+              "sparse_sweep")
   serving  -> bench_serving          (batched Poisson serving -> BENCH_serving.json)
   placement-> bench_placement        (NoC cut traffic: search vs round-robin
               -> BENCH_network.json "placement")
@@ -41,6 +44,7 @@ def main() -> None:
         bench_network,
         bench_placement,
         bench_serving,
+        bench_sparse,
         bench_switching,
     )
 
@@ -56,6 +60,7 @@ def main() -> None:
     bench_network.run()
     bench_network.run_batch_sweep()
     bench_network.run_donation()
+    bench_sparse.run(fast=args.fast)
     bench_serving.run()
     bench_placement.run()
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")

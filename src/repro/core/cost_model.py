@@ -151,11 +151,25 @@ class SerialBatchCostModel:
     * ``batch_exponent`` — super-linearity of the flat segment-sum in
       batch (1.0 = perfectly linear; measured ~1.5 on the CPU backend).
     * ``mac_coeff`` — cost of one dense MAC (the unit).
+    * ``gather_coeff`` — cost of one gathered ELL element in the *sparse*
+      form (:func:`repro.core.runtime.serial_project_sparse`) relative to
+      one dense MAC.  The gather reads are batch-contiguous (each ELL row
+      gathers whole ``(B,)`` lanes), so unlike the scatter it scales
+      *linearly* in batch — pricier per element than a MAC
+      (``gather > mac``) but cheaper than a scattered accumulate at
+      batch >= 2 (``gather < scatter * B^(exponent-1)``).
+    * ``dense_element_cap`` — largest ``S * d_slots * T`` the dense form
+      may materialize; above it dense is excluded from
+      :meth:`choose_form` outright (mirrors
+      ``repro.core.layer.DENSE_ELEMENT_CAP`` — a projection that only
+      fits sparse must never pick the form that would densify it).
     """
 
     scatter_coeff: float = 16.0
     batch_exponent: float = 1.5
     mac_coeff: float = 1.0
+    gather_coeff: float = 24.0
+    dense_element_cap: int = 2 ** 24
 
     def event_cost(self, n_rows: int, batch: int) -> float:
         """Relative cost of one event-form timestep at this batch."""
@@ -167,6 +181,18 @@ class SerialBatchCostModel:
         """Relative cost of one dense-form timestep at this batch."""
         return self.mac_coeff * batch * n_source * (delay_range + 1) * n_target
 
+    def sparse_cost(self, n_rows: int, batch: int) -> float:
+        """Relative cost of one sparse (ELL gather) timestep at this batch."""
+        return self.gather_coeff * n_rows * float(batch)
+
+    def dense_fits(
+        self, n_source: int, n_target: int, delay_range: int
+    ) -> bool:
+        """May the dense ``(d_slots, S, T)`` operand be materialized at all?"""
+        return (
+            n_source * (delay_range + 1) * n_target <= self.dense_element_cap
+        )
+
     def prefer_dense(
         self,
         n_rows: int,
@@ -175,12 +201,59 @@ class SerialBatchCostModel:
         delay_range: int,
         batch: int,
     ) -> bool:
-        """Should ``serial_step`` switch to the dense matmul form?"""
+        """Should ``serial_step`` switch to the dense matmul form?
+
+        The legacy *two-way* (event vs dense) question; kept because its
+        crossover algebra (:meth:`crossover_batch`) is pinned by tests and
+        refit by ``tools/fit_cost_model.py``.  The executor itself asks
+        the three-way :meth:`choose_form`.
+        """
         if n_rows == 0:
             return False         # empty layer: nothing to scatter
         return self.event_cost(n_rows, batch) > self.dense_cost(
             n_source, n_target, delay_range, batch
         )
+
+    def choose_form(
+        self,
+        n_rows: int,
+        n_source: int,
+        n_target: int,
+        delay_range: int,
+        batch: int,
+    ) -> str:
+        """Cheapest serial kernel form: ``"event"``, ``"sparse"`` or ``"dense"``.
+
+        All three forms are bit-identical on outputs (integer weights,
+        exact float32 accumulation), so this is purely a throughput
+        argmin.  Structure of the space:
+
+        * batch 1 — event wins (``scatter < gather`` per element and the
+          scatter's super-linearity hasn't kicked in yet).
+        * growing batch at fixed density — sparse overtakes event (linear
+          vs ``B^1.5``), then dense overtakes sparse iff the layer is
+          dense enough: ``dense < sparse`` ⇔ ``d_slots / density <
+          gather_coeff``.
+        * the choice is *monotone in density* at fixed batch: more rows
+          per dense element only ever moves the argmin toward dense.
+        * layers over :attr:`dense_element_cap` never pick dense — the
+          operand physically shouldn't exist.
+
+        Ties break toward the cheaper-memory form (event < sparse <
+        dense).
+        """
+        if n_rows == 0:
+            return "event"       # nothing to scatter, gather, or multiply
+        costs = [
+            ("event", self.event_cost(n_rows, batch)),
+            ("sparse", self.sparse_cost(n_rows, batch)),
+        ]
+        if self.dense_fits(n_source, n_target, delay_range):
+            costs.append(
+                ("dense", self.dense_cost(n_source, n_target, delay_range, batch))
+            )
+        best = min(costs, key=lambda fc: fc[1])
+        return best[0]
 
     def crossover_batch(
         self, n_rows: int, n_source: int, n_target: int, delay_range: int
@@ -268,6 +341,8 @@ class SerialBatchCostModel:
             "scatter_coeff": self.scatter_coeff,
             "batch_exponent": self.batch_exponent,
             "mac_coeff": self.mac_coeff,
+            "gather_coeff": self.gather_coeff,
+            "dense_element_cap": float(self.dense_element_cap),
         }
 
 

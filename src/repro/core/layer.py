@@ -30,6 +30,42 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .hw import BudgetExceeded
+
+#: Largest ``n_source * n_target`` a *dense* ``(S, T)`` weight matrix may
+#: materialize (2**24 elements = 64 MiB of float32 per array, weights and
+#: delays each).  Beyond this the dense representation is the memory cliff
+#: the sparse storage exists to avoid — a SpiNNCer-scale network (97k
+#: neurons, ~0.04 % density) is physically unrepresentable densely —
+#: so :func:`random_layer` / :func:`densify` raise
+#: :class:`DenseStorageError` instead of silently OOMing.  Pass
+#: ``max_elements=`` to raise the cap deliberately.
+DENSE_ELEMENT_CAP = 2 ** 24
+
+
+class DenseStorageError(BudgetExceeded):
+    """A dense ``(S, T)`` weight matrix would exceed the element cap.
+
+    The fix is almost always sparse storage
+    (:class:`SparseProjection` / :func:`random_sparse_projection`), which
+    holds only the nonzero synapses in CSR form; ``max_elements=`` raises
+    the cap for callers that genuinely want the dense array.
+    """
+
+
+def _check_dense_budget(
+    n_source: int, n_target: int, max_elements: Optional[int], what: str
+) -> None:
+    cap = DENSE_ELEMENT_CAP if max_elements is None else int(max_elements)
+    if n_source * n_target > cap:
+        raise DenseStorageError(
+            f"{what}: dense ({n_source}, {n_target}) storage is "
+            f"{n_source * n_target} elements, over the {cap}-element cap "
+            f"— use sparse storage (random_sparse_projection / "
+            f"SparseProjection.from_dense) or pass max_elements= to raise "
+            f"the cap deliberately"
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class LayerCharacter:
@@ -140,6 +176,7 @@ def random_layer(
     inhibitory_fraction: float = 0.2,
     delay_granularity: str = "source",
     name: str = "layer",
+    max_elements: Optional[int] = None,
 ) -> SNNLayer:
     """Generate a random layer like the paper's dataset generator (§IV-A).
 
@@ -154,9 +191,14 @@ def random_layer(
       the parallel paradigm wins the broad region Fig 3 shows (DESIGN.md §2).
     * ``"synapse"`` — per-synapse delays (the fully general sPyNNaker row
       format; supported end-to-end and used as an ablation).
+
+    Raises :class:`DenseStorageError` when ``n_source * n_target`` exceeds
+    ``max_elements`` (default :data:`DENSE_ELEMENT_CAP`) — use
+    :func:`random_sparse_projection` for networks of that scale.
     """
     if delay_granularity not in ("source", "synapse"):
         raise ValueError(delay_granularity)
+    _check_dense_budget(n_source, n_target, max_elements, f"random_layer({name!r})")
     rng = np.random.default_rng(seed)
     mask = rng.random((n_source, n_target)) < density
     mag = rng.integers(1, 128, size=(n_source, n_target)).astype(np.float64)
@@ -219,17 +261,256 @@ def random_projection(
     inhibitory_fraction: float = 0.2,
     delay_granularity: str = "source",
     name: Optional[str] = None,
+    max_elements: Optional[int] = None,
 ) -> Projection:
-    """A :func:`random_layer` whose shape comes from its two populations."""
+    """A :func:`random_layer` whose shape comes from its two populations.
+
+    Raises :class:`DenseStorageError` above the dense element cap — use
+    :func:`random_sparse_projection` for networks of that scale.
+    """
     layer = random_layer(
         pre.size, post.size, density, delay_range, seed=seed,
         inhibitory_fraction=inhibitory_fraction,
         delay_granularity=delay_granularity,
         name=name or f"{pre.name}->{post.name}",
+        max_elements=max_elements,
     )
     return Projection(
         weights=layer.weights, delays=layer.delays,
         delay_range=layer.delay_range, lif=layer.lif, name=layer.name,
+        pre=pre.name, post=post.name,
+    )
+
+
+@dataclasses.dataclass
+class SparseProjection:
+    """A projection stored in CSR form — only nonzero synapses exist.
+
+    Rows are source neurons.  ``indptr`` is the ``(S + 1,)`` int64 row
+    pointer; ``indices`` holds each synapse's target-neuron column
+    (sorted, duplicate-free within each row); ``values`` holds the signed
+    weight (excitatory > 0, inhibitory < 0, never 0) and ``delay_values``
+    the per-synapse delay in ``[1, delay_range]``.  ``densify()`` is the
+    exact inverse of :meth:`from_dense` on any dense projection, and the
+    differential harness (``tests/test_sparse_equivalence.py``) pins every
+    sparse launch path bit-identical to the densified numpy oracle.
+
+    This is deliberately *not* a subclass of :class:`SNNLayer` — there is
+    no dense ``(S, T)`` array to inherit, which is the point.  Consumers
+    (classifier, compilers, executor, tiling) interact through the shared
+    duck-typed surface: ``n_source`` / ``n_target`` / ``n_synapses`` /
+    ``density()`` / ``character()`` / ``lif`` / ``name`` / ``pre`` /
+    ``post``, plus the sparse-only ``coo()`` / ``densify()`` /
+    ``slice_block()``.  Use :func:`is_sparse` to branch where the storage
+    format matters.
+    """
+
+    n_source: int
+    n_target: int
+    indptr: np.ndarray        # (S + 1,) int64, monotone, indptr[-1] == nnz
+    indices: np.ndarray       # (nnz,) int64 target columns, sorted per row
+    values: np.ndarray        # (nnz,) float64 signed weights, nonzero
+    delay_values: np.ndarray  # (nnz,) int64 delays in [1, delay_range]
+    delay_range: int
+    lif: LIFParams = dataclasses.field(default_factory=LIFParams)
+    name: str = "sparse"
+    pre: Optional[str] = None
+    post: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        self.indptr = np.asarray(self.indptr, dtype=np.int64)
+        self.indices = np.asarray(self.indices, dtype=np.int64)
+        self.values = np.asarray(self.values, dtype=np.float64)
+        self.delay_values = np.asarray(self.delay_values, dtype=np.int64)
+        if self.indptr.shape != (self.n_source + 1,):
+            raise ValueError(
+                f"sparse projection {self.name!r}: indptr shape "
+                f"{self.indptr.shape} != ({self.n_source + 1},)"
+            )
+        if self.indptr[0] != 0 or (np.diff(self.indptr) < 0).any():
+            raise ValueError(f"sparse projection {self.name!r}: bad indptr")
+        nnz = int(self.indptr[-1])
+        if not (self.indices.shape == self.values.shape
+                == self.delay_values.shape == (nnz,)):
+            raise ValueError(
+                f"sparse projection {self.name!r}: indices/values/delays "
+                f"must all be ({nnz},)"
+            )
+        if nnz:
+            if self.indices.min() < 0 or self.indices.max() >= self.n_target:
+                raise ValueError(
+                    f"sparse projection {self.name!r}: column out of range"
+                )
+            if (self.values == 0.0).any():
+                raise ValueError(
+                    f"sparse projection {self.name!r}: explicit zero weight "
+                    f"— drop the entry instead"
+                )
+            if self.delay_values.min() < 1 or (
+                int(self.delay_values.max()) > self.delay_range
+            ):
+                raise ValueError(
+                    f"sparse projection {self.name!r}: delay outside "
+                    f"[1, {self.delay_range}]"
+                )
+            for r in range(self.n_source):
+                row = self.indices[self.indptr[r]:self.indptr[r + 1]]
+                if row.size > 1 and (np.diff(row) <= 0).any():
+                    raise ValueError(
+                        f"sparse projection {self.name!r}: row {r} columns "
+                        f"must be strictly increasing (sorted, no duplicates)"
+                    )
+        if not self.pre or not self.post:
+            raise ValueError(
+                f"sparse projection {self.name!r} needs pre= and post= "
+                f"populations"
+            )
+
+    @property
+    def n_synapses(self) -> int:
+        return int(self.indptr[-1])
+
+    def density(self) -> float:
+        return self.n_synapses / float(self.n_source * self.n_target)
+
+    def character(self) -> LayerCharacter:
+        return LayerCharacter(
+            n_source=self.n_source,
+            n_target=self.n_target,
+            weight_density=self.density(),
+            delay_range=self.delay_range,
+        )
+
+    def coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """``(src, tgt, weight, delay)`` per synapse, row-major order."""
+        src = np.repeat(
+            np.arange(self.n_source, dtype=np.int64), np.diff(self.indptr)
+        )
+        return src, self.indices, self.values, self.delay_values
+
+    def densify(self, max_elements: Optional[int] = None) -> Projection:
+        """The exact dense :class:`Projection` this CSR form represents.
+
+        Unconnected slots get weight 0 and delay 1 (ignored, matching the
+        dense generators).  Subject to the same element cap as
+        :func:`random_projection` — the oracle densifies small fixtures,
+        it must never be the accidental path to a 100 MB array.
+        """
+        _check_dense_budget(
+            self.n_source, self.n_target, max_elements,
+            f"SparseProjection.densify({self.name!r})",
+        )
+        weights = np.zeros((self.n_source, self.n_target), dtype=np.float64)
+        delays = np.ones((self.n_source, self.n_target), dtype=np.int64)
+        src, tgt, w, d = self.coo()
+        weights[src, tgt] = w
+        delays[src, tgt] = d
+        return Projection(
+            weights=weights, delays=delays, delay_range=self.delay_range,
+            lif=self.lif, name=self.name, pre=self.pre, post=self.post,
+        )
+
+    @classmethod
+    def from_dense(cls, layer: SNNLayer, *,
+                   pre: Optional[str] = None,
+                   post: Optional[str] = None,
+                   name: Optional[str] = None) -> "SparseProjection":
+        """CSR form of a dense layer; ``densify()`` inverts it exactly."""
+        mask = layer.connectivity()
+        src, tgt = np.nonzero(mask)          # row-major, cols sorted per row
+        counts = np.bincount(src, minlength=layer.n_source)
+        indptr = np.zeros(layer.n_source + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return cls(
+            n_source=layer.n_source, n_target=layer.n_target,
+            indptr=indptr, indices=tgt.astype(np.int64),
+            values=layer.weights[src, tgt].astype(np.float64),
+            delay_values=layer.delays[src, tgt].astype(np.int64),
+            delay_range=layer.delay_range, lif=layer.lif,
+            name=name or layer.name,
+            pre=pre or layer.pre, post=post or layer.post,
+        )
+
+    def slice_block(self, r0: int, r1: int, c0: int, c1: int, *,
+                    pre: str, post: str, name: str) -> "SparseProjection":
+        """The CSR sub-matrix ``[r0:r1, c0:c1]`` — no densification.
+
+        The tiling pass slices population blocks this way; columns inside
+        each row are already sorted, so masking preserves CSR invariants.
+        """
+        starts = self.indptr[r0:r1]
+        stops = self.indptr[r0 + 1:r1 + 1]
+        keep = np.zeros(self.n_synapses, dtype=bool)
+        for a, b in zip(starts, stops):
+            keep[a:b] = True
+        keep &= (self.indices >= c0) & (self.indices < c1)
+        src_all = np.repeat(
+            np.arange(self.n_source, dtype=np.int64), np.diff(self.indptr)
+        )
+        src = src_all[keep] - r0
+        counts = np.bincount(src, minlength=r1 - r0)
+        indptr = np.zeros(r1 - r0 + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return SparseProjection(
+            n_source=r1 - r0, n_target=c1 - c0,
+            indptr=indptr, indices=self.indices[keep] - c0,
+            values=self.values[keep], delay_values=self.delay_values[keep],
+            delay_range=self.delay_range, lif=self.lif,
+            name=name, pre=pre, post=post,
+        )
+
+
+def is_sparse(proj: object) -> bool:
+    """True when ``proj`` uses CSR storage (:class:`SparseProjection`)."""
+    return isinstance(proj, SparseProjection)
+
+
+def random_sparse_projection(
+    pre: Population,
+    post: Population,
+    density: float,
+    delay_range: int,
+    *,
+    seed: int,
+    inhibitory_fraction: float = 0.2,
+    delay_granularity: str = "source",
+    name: Optional[str] = None,
+) -> SparseProjection:
+    """Generate a random CSR projection without materializing ``(S, T)``.
+
+    Distribution-compatible with :func:`random_projection` (Bernoulli
+    connectivity via per-row binomial counts, int8-magnitude signed
+    weights, uniform delays, source/synapse delay granularity) but memory
+    scales with nnz, so SpiNNCer-scale nets (~0.04 % of 97k²) fit easily.
+    """
+    if delay_granularity not in ("source", "synapse"):
+        raise ValueError(delay_granularity)
+    if not (0.0 <= density <= 1.0):
+        raise ValueError("density must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    S, T = pre.size, post.size
+    counts = rng.binomial(T, density, size=S).astype(np.int64)
+    indptr = np.zeros(S + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    nnz = int(indptr[-1])
+    indices = np.empty(nnz, dtype=np.int64)
+    for r in range(S):
+        k = counts[r]
+        if k:
+            indices[indptr[r]:indptr[r + 1]] = np.sort(
+                rng.choice(T, size=k, replace=False)
+            )
+    mag = rng.integers(1, 128, size=nnz).astype(np.float64)
+    sign = np.where(rng.random(nnz) < inhibitory_fraction, -1.0, 1.0)
+    if delay_granularity == "source":
+        per_src = rng.integers(1, delay_range + 1, size=S)
+        delays = np.repeat(per_src, counts)
+    else:
+        delays = rng.integers(1, delay_range + 1, size=nnz)
+    return SparseProjection(
+        n_source=S, n_target=T, indptr=indptr, indices=indices,
+        values=mag * sign, delay_values=delays.astype(np.int64),
+        delay_range=delay_range, name=name or f"{pre.name}->{post.name}",
         pre=pre.name, post=post.name,
     )
 

@@ -37,7 +37,7 @@ from .cost_model import (
     total,
 )
 from .hw import SpiNNaker2Config, DEFAULT_S2
-from .layer import SNNLayer
+from .layer import SNNLayer, is_sparse
 
 _SLICE_HEADER_BYTES = 8
 _BLOCK_INDEX_BYTES = 4
@@ -225,6 +225,11 @@ def parallel_pe_count_exact(
     of the 16,000 dataset layers ("the optimized weight-delay-map ... can't be
     accurately estimated").
     """
+    if is_sparse(layer):
+        # the parallel paradigm materializes dense MAC slices by design, so
+        # CSR inputs densify here — and the dense element cap still applies:
+        # a projection that only fits sparse cannot be compiled parallel
+        layer = layer.densify()
     stats, n_blocks = _slice_stats(layer, opts, hw)
     n_src_vertex = max(1, math.ceil(layer.n_source / hw.max_neurons_per_pe))
     dom_cost = total(
@@ -247,6 +252,10 @@ def compile_parallel(
     hw: SpiNNaker2Config = DEFAULT_S2,
     opts: OptFlags = OptFlags(),
 ) -> ParallelProgram:
+    if is_sparse(layer):
+        # dense MAC slices are the parallel paradigm's whole storage format;
+        # densify (subject to the element cap) rather than pretend otherwise
+        layer = layer.densify()
     stats, n_blocks = _slice_stats(layer, opts, hw)
     n_src_vertex = max(1, math.ceil(layer.n_source / hw.max_neurons_per_pe))
 

@@ -6,7 +6,10 @@ from .serial_runtime import (
     run_serial,
     serial_project,
     serial_project_dense,
+    serial_project_sparse,
     serial_step_dense,
+    serial_step_sparse,
+    sparse_serial_operands,
 )
 from .parallel_runtime import (
     ParallelExecutable,
@@ -48,8 +51,9 @@ __all__ = [
     "run_network", "run_network_layerwise", "run_graph_reference",
     "LIFState", "init_state", "run_reference",
     "SerialExecutable", "lower_serial", "run_serial",
-    "serial_project", "serial_project_dense",
-    "serial_step_dense", "dense_serial_weights",
+    "serial_project", "serial_project_dense", "serial_project_sparse",
+    "serial_step_dense", "serial_step_sparse",
+    "dense_serial_weights", "sparse_serial_operands",
     "ParallelExecutable", "lower_parallel", "parallel_project",
     "run_parallel",
     "GraphPlan", "LayerMeta", "NetworkExecutable",

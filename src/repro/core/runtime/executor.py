@@ -38,10 +38,19 @@ Batched and sharded execution (see ``docs/architecture.md``):
   request, ``jax.vmap``-ed over the request axis, ``valid_steps`` masking
   preserved per lane.  Bit-identical to the fused path (integer
   accumulation), but lets XLA batch each request's program independently.
-* Serial projections pick between the event-driven ``segment_sum`` form
-  and the dense matmul fallback per launch batch
-  (:class:`repro.core.cost_model.SerialBatchCostModel`); the choice is
-  recorded in ``CompileReport.serial_forms`` and never changes outputs.
+* Serial projections pick between the event-driven ``segment_sum`` form,
+  the ELL gather-accumulate **sparse** form, and the dense matmul
+  fallback per launch batch
+  (:meth:`repro.core.cost_model.SerialBatchCostModel.choose_form`); the
+  choice is recorded in ``CompileReport.serial_forms`` and never changes
+  outputs.  Projections too large to materialize densely (over the cost
+  model's element cap) never pick dense — the sparse form is what lets
+  20k+-neuron, sub-percent-density graphs run through the same scan.
+* Spike state crossing timesteps is **int8** end-to-end: the
+  per-population previous-spike vectors and the back-edge feedback ring
+  are carried as int8 (spikes are exactly 0/1, so the casts are
+  bit-exact), matching the parallel paradigm's int8 spike-history rings
+  and cutting carried-state memory traffic 4x.
 * :meth:`NetworkExecutable.shard` places the lowered weight/delay
   operands by the logical-axis rules in
   :mod:`repro.distributed.sharding` (``snn_rules``: batch -> data,
@@ -82,6 +91,8 @@ from .serial_runtime import (
     lower_serial,
     serial_project,
     serial_project_dense,
+    serial_project_sparse,
+    sparse_serial_operands,
 )
 
 
@@ -228,12 +239,15 @@ def _init_graph_carry(
         jnp.zeros((batch, plan.pop_sizes[p]), jnp.float32)
         for p in plan.update_order
     )
+    # spike state crossing timesteps is int8 (spikes are exactly 0/1, the
+    # f32<->int8 casts are bit-exact) — same layout as the parallel spike
+    # history rings, 4x less carried-state traffic
     pop_z = tuple(
-        jnp.zeros((batch, plan.pop_sizes[p]), jnp.float32)
+        jnp.zeros((batch, plan.pop_sizes[p]), jnp.int8)
         for p in plan.update_order
     )
     feedback = tuple(
-        jnp.zeros((batch, plan.pop_sizes[s]), jnp.float32)
+        jnp.zeros((batch, plan.pop_sizes[s]), jnp.int8)
         for s in plan.back_sources
     )
     return (tuple(proj), pop_v, pop_z, feedback)
@@ -250,7 +264,7 @@ def _carry_axes(plan: GraphPlan, metas: Tuple[LayerMeta, ...]):
 def _scan_network(
     plan: GraphPlan,
     metas: Tuple[LayerMeta, ...],
-    forms: Tuple[str, ...],       # per projection: "event" | "dense" | "-"
+    forms: Tuple[str, ...],       # per proj: "event" | "sparse" | "dense" | "-"
     interpret: bool | None,
     params: List[Tuple[jnp.ndarray, ...]],
     states,                       # _init_graph_carry output (donated)
@@ -289,19 +303,19 @@ def _scan_network(
             for ei in plan.in_edges[p]:
                 meta, form = metas[ei], forms[ei]
                 # back-edges read the source's spikes from the previous
-                # timestep (feedback ring); forward edges cascade within
-                # the step in topological order
+                # timestep (feedback ring, carried int8 — the f32 cast of
+                # 0/1 spikes is exact); forward edges cascade within the
+                # step in topological order
                 x = (
-                    feedback[fb_slot[plan.proj_src[ei]]]
+                    feedback[fb_slot[plan.proj_src[ei]]].astype(jnp.float32)
                     if plan.proj_back[ei]
                     else pop_out[plan.proj_src[ei]]
                 )
                 if meta.paradigm == "serial":
-                    proj_fn = (
-                        serial_project_dense
-                        if form == "dense"
-                        else serial_project
-                    )
+                    proj_fn = {
+                        "dense": serial_project_dense,
+                        "sparse": serial_project_sparse,
+                    }.get(form, serial_project)
                     ring, i_bt = proj_fn(
                         *params[ei], proj_states[ei], x, t,
                         delay_range=meta.delay_range,
@@ -317,13 +331,18 @@ def _scan_network(
                     new_proj[ei] = hist
                 i_nb = i_e if i_nb is None else i_nb + i_e
             v_new, z_new = lif_update(
-                i_nb, pop_v[k].T, pop_z[k].T,
+                i_nb, pop_v[k].T, pop_z[k].T.astype(jnp.float32),
                 alpha=plan.pop_alpha[p], v_th=plan.pop_vth[p],
                 interpret=interpret,
             )
-            new_v[k], new_z[k] = v_new.T, z_new.T
+            # previous-spike state crosses the timestep as int8 (exact:
+            # spikes are 0/1); the f32 train is what the step emits and
+            # what same-step forward projections consume
+            new_v[k], new_z[k] = v_new.T, z_new.T.astype(jnp.int8)
             pop_out[p] = z_new.T
-        new_feedback = tuple(pop_out[s] for s in plan.back_sources)
+        new_feedback = tuple(
+            pop_out[s].astype(jnp.int8) for s in plan.back_sources
+        )
         # emit ONE train per (non-input) population — a fan-in target is
         # stacked once however many projections converge on it; the
         # launch wrappers expand to the per-projection API view outside
@@ -393,6 +412,10 @@ def _param_axes(meta: LayerMeta, form: str) -> Tuple[Tuple, ...]:
     if meta.paradigm == "serial":
         if form == "dense":
             return ((None, None, "neurons"),)      # (d_slots, S, T)
+        if form == "sparse":
+            # ELL rows are (delay_slot, target) pairs — the target-neuron
+            # axis in disguise
+            return (("neurons", None), ("neurons", None))  # ell_val, ell_idx
         return (("rows",),) * 4                    # weight/delay/src/tgt
     # parallel: wdm_stack (n_target, C), col_source (C,), col_delay (C,)
     return (("neurons", "cols"), ("cols",), ("cols",))
@@ -430,6 +453,7 @@ class NetworkExecutable:
         self.donate = True
         self._fns = {}       # (path, interpret, forms, donate) -> jitted scan
         self._dense = {}     # layer index -> (d_slots, S, T) dense operand
+        self._sparse = {}    # layer index -> (ell_val, ell_idx) ELL operands
         self._mesh = None    # set by shard(); None = identity fallback
         self._rules = None
         #: Device scalar from the last launch: True iff every output
@@ -486,30 +510,41 @@ class NetworkExecutable:
     def serial_forms(
         self, batch: int, serial_form: str = "auto"
     ) -> Tuple[str, ...]:
-        """Per-projection kernel form at this batch: "event"|"dense" ("-" =
-        parallel).
+        """Per-projection kernel form at this batch: "event" | "sparse" |
+        "dense" ("-" = parallel).
 
         ``serial_form`` forces every serial projection onto one form
-        ("event" / "dense"); "auto" asks the cost model per projection —
-        dense once ``batch`` crosses
-        :meth:`~repro.core.cost_model.SerialBatchCostModel.crossover_batch`.
+        ("event" / "sparse" / "dense"); "auto" asks the cost model's
+        three-way argmin per projection
+        (:meth:`~repro.core.cost_model.SerialBatchCostModel.choose_form`).
+        Forcing "dense" on a projection over the cost model's element cap
+        raises — the dense operand physically shouldn't exist; every form
+        is bit-identical on outputs, so the choice only moves throughput.
         """
-        if serial_form not in ("auto", "event", "dense"):
+        if serial_form not in ("auto", "event", "sparse", "dense"):
             raise ValueError(f"unknown serial_form {serial_form!r}")
         forms = []
         for meta in self.metas:
             if meta.paradigm != "serial":
                 forms.append("-")
             elif serial_form != "auto":
+                if serial_form == "dense" and not self.cost_model.dense_fits(
+                    meta.n_source, meta.n_target, meta.delay_range
+                ):
+                    raise ValueError(
+                        f"serial_form='dense' forced on a projection whose "
+                        f"({meta.delay_range + 1}, {meta.n_source}, "
+                        f"{meta.n_target}) dense operand exceeds the "
+                        f"{self.cost_model.dense_element_cap}-element cap — "
+                        f"use serial_form='sparse' (or 'auto')"
+                    )
                 forms.append(serial_form)
             else:
                 forms.append(
-                    "dense"
-                    if self.cost_model.prefer_dense(
+                    self.cost_model.choose_form(
                         meta.n_rows, meta.n_source, meta.n_target,
                         meta.delay_range, batch,
                     )
-                    else "event"
                 )
         return tuple(forms)
 
@@ -529,9 +564,30 @@ class NetworkExecutable:
             self._dense[i] = w
         return (w,)
 
+    def _sparse_param(self, i: int) -> Tuple[jnp.ndarray, ...]:
+        """The layer's ELL (sparse-form) operands, built once and cached."""
+        ell = self._sparse.get(i)
+        if ell is None:
+            meta, p = self.metas[i], self.params[i]
+            exe = SerialExecutable(
+                n_source=meta.n_source, n_target=meta.n_target,
+                delay_range=meta.delay_range,
+                row_weight=p[0], row_delay=p[1], row_src=p[2], row_tgt=p[3],
+                lif=LIFParams(alpha=meta.alpha, v_th=meta.v_th),
+            )
+            val, idx = sparse_serial_operands(exe)
+            axes = _param_axes(meta, "sparse")
+            ell = (
+                self._place(jnp.asarray(val), axes[0]),
+                self._place(jnp.asarray(idx), axes[1]),
+            )
+            self._sparse[i] = ell
+        return ell
+
     def _params_for(self, forms: Tuple[str, ...]) -> List[Tuple]:
+        per_form = {"dense": self._dense_param, "sparse": self._sparse_param}
         return [
-            self._dense_param(i) if form == "dense" else p
+            per_form[form](i) if form in per_form else p
             for i, (form, p) in enumerate(zip(forms, self.params))
         ]
 
@@ -585,6 +641,7 @@ class NetworkExecutable:
             self._mesh = None      # device pinning replaces mesh placement
             self._rules = None
             self._dense.clear()
+            self._sparse.clear()
             self._fns.clear()
             if self.report is not None:
                 self.report.placement = assignment
@@ -607,9 +664,10 @@ class NetworkExecutable:
             )
             for meta, p in zip(self.metas, self.params)
         ]
-        # dense operands and jitted entries were traced/placed against the
-        # old layout; rebuild both lazily
+        # dense/sparse operands and jitted entries were traced/placed
+        # against the old layout; rebuild all lazily
         self._dense.clear()
+        self._sparse.clear()
         self._fns.clear()
         return self
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..layer import LIFParams, SNNLayer
+from ..layer import LIFParams, SNNLayer, is_sparse
 
 
 @jax.tree_util.register_dataclass
@@ -45,8 +45,19 @@ def init_state(batch: int, n_target: int, delay_range: int) -> LIFState:
 
 
 def delay_stacked_weights(layer: SNNLayer) -> np.ndarray:
-    """(delay_range, n_source, n_target) float32: slice d-1 holds delay-d weights."""
+    """(delay_range, n_source, n_target) float32: slice d-1 holds delay-d weights.
+
+    Accepts dense layers and CSR
+    :class:`~repro.core.layer.SparseProjection` storage alike — the oracle
+    *densifies internally* (it is the brute-force ground truth, not a
+    scalable path), so sparse fixtures diff against exactly the same
+    dense per-delay tensors their densified twins produce.
+    """
     out = np.zeros((layer.delay_range, layer.n_source, layer.n_target), np.float32)
+    if is_sparse(layer):
+        src, tgt, w, d = layer.coo()
+        out[d - 1, src, tgt] = w
+        return out
     conn = layer.connectivity()
     for d in range(1, layer.delay_range + 1):
         m = conn & (layer.delays == d)
@@ -109,7 +120,10 @@ def run_graph_reference(net, spikes: np.ndarray) -> list:
     Simulates an :class:`~repro.core.layer.SNNNetwork` graph (fan-in,
     fan-out, self-loops, recurrent edges) with an explicit Python loop
     over timesteps, dense per-delay weight tensors per projection, and
-    the same float32 arithmetic as the fused executor:
+    the same float32 arithmetic as the fused executor.  Sparse (CSR)
+    projections are accepted and **densified internally** via
+    :func:`delay_stacked_weights` — the oracle is ground truth, not a
+    scalable path, so keep its fixtures small.
 
     * forward projections see their source population's spikes from the
       **current** timestep (within-step cascade in topological order);

@@ -14,17 +14,27 @@ The scatter is a single flat ``segment_sum`` over all ``B * R`` (batch, row)
 pairs with batch-offset segment ids; the neural update runs through the
 fused Pallas LIF kernel (:func:`repro.kernels.lif_update`).
 
-Two kernel *forms* implement that step:
+Three kernel *forms* implement that step:
 
 * :func:`serial_step` — the event form above; work ``O(B * R)`` but the
   scatter's locality degrades super-linearly in batch.
 * :func:`serial_step_dense` — the dense fallback: the row arrays folded
   into a ``(d_slots, S, T)`` tensor so the whole update is one einsum plus
   a ring roll.  More MACs, each far cheaper, batch-scaling like the
-  parallel paradigm.  All weights are int8-magnitude integers, so both
-  forms accumulate exactly in float32 and their spike trains are
-  **bit-identical** — which form runs is purely a throughput decision
-  (:class:`repro.core.cost_model.SerialBatchCostModel`).
+  parallel paradigm — but the operand is dense storage, physically
+  impossible for 100k-neuron sparse projections.
+* :func:`serial_project_sparse` — the ELL gather form: synapses grouped
+  into equal-length rows per (delay-slot, target) pair, each row
+  *gathering* its sources' spike lanes (SpikeStream-style,
+  :mod:`repro.kernels.sparse_gather`).  Work ``O(B * R)`` like the event
+  form but with batch-contiguous reads instead of a scattered accumulate,
+  so it scales linearly in batch; memory ``O(nnz)`` like the event form,
+  so it is the only batch-friendly form sparse giants can run.
+
+All weights are int8-magnitude integers, so every form accumulates
+exactly in float32 and their spike trains are **bit-identical** — which
+form runs is purely a throughput decision
+(:class:`repro.core.cost_model.SerialBatchCostModel.choose_form`).
 
 Each form is split into a *projection* half (:func:`serial_project` /
 :func:`serial_project_dense`: delay-ring scatter -> this step's input
@@ -44,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...kernels.lif_update import lif_update
+from ...kernels.sparse_gather import sparse_gather
 from ..layer import LIFParams, SNNLayer
 from ..serial_compiler import SerialProgram, compile_serial, unpack_rows
 from .reference import LIFState, init_state
@@ -236,6 +247,103 @@ def serial_step_dense(
     """Dense-fallback serial step — same carry, same outputs, all matmul."""
     ring, i_t = serial_project_dense(
         w_dense, state.ring, x_t, t,
+        delay_range=delay_range, n_target=n_target, interpret=interpret,
+    )
+    # fused Pallas LIF update operates (neurons, batch)
+    v_new, z_new = lif_update(
+        i_t.T, state.v.T, state.z.T, alpha=alpha, v_th=v_th, interpret=interpret
+    )
+    return LIFState(v=v_new.T, z=z_new.T, ring=ring), z_new.T
+
+
+def sparse_serial_operands(exe: SerialExecutable):
+    """Group the flat row arrays into ELL form for the sparse kernel.
+
+    One ELL row per ``(delay_slot, target)`` pair — row id ``delay *
+    n_target + target`` — holding that pair's source indices and weights,
+    padded to the longest row with weight-0 / index-0 lanes.  The gather
+    ``out[row] = sum_l w[row, l] * x[idx[row, l]]`` then computes exactly
+    the sum the event form scatters into ring slot ``(t + delay) %
+    d_slots`` at target ``target``; reshaping rows to ``(d_slots, T)`` and
+    rolling by ``t`` reuses the dense form's ring update verbatim.
+
+    Returns ``(ell_val, ell_idx)``: ``(d_slots * n_target, L)`` f32/i32
+    host-side numpy arrays (lowered once per executable, cached by the
+    executor next to the dense operand).
+    """
+    d_slots = exe.delay_range + 1
+    T = exe.n_target
+    w = np.asarray(exe.row_weight, np.float32)
+    dly = np.asarray(exe.row_delay, np.int64)
+    src = np.asarray(exe.row_src, np.int64)
+    tgt = np.asarray(exe.row_tgt, np.int64)
+    n_rows = d_slots * T
+    row_id = dly * T + tgt
+    counts = np.bincount(row_id, minlength=n_rows)
+    L = max(1, int(counts.max()) if counts.size else 1)
+    order = np.argsort(row_id, kind="stable")
+    starts = np.cumsum(counts) - counts               # first slot of each row
+    lane = np.arange(row_id.size) - np.repeat(starts, counts)
+    ell_val = np.zeros((n_rows, L), np.float32)
+    ell_idx = np.zeros((n_rows, L), np.int32)
+    ell_val[row_id[order], lane] = w[order]
+    ell_idx[row_id[order], lane] = src[order]
+    return ell_val, ell_idx
+
+
+@partial(
+    jax.jit,
+    static_argnames=("delay_range", "n_target", "interpret"),
+)
+def serial_project_sparse(
+    ell_val,             # (d_slots * T, L) f32 ELL weights
+    ell_idx,             # (d_slots * T, L) i32 ELL source indices
+    ring: jnp.ndarray,   # (d_slots, B, n_target) f32 future input currents
+    x_t: jnp.ndarray,    # (B, S)
+    t: jnp.ndarray,
+    *,
+    delay_range: int,
+    n_target: int,
+    interpret: bool | None = None,
+):
+    """Sparse (ELL gather) synaptic-current step — same ring, same currents.
+
+    Each ELL row gathers and accumulates one ``(delay, target)`` pair's
+    contribution for the whole batch (:mod:`repro.kernels.sparse_gather`);
+    reshaping to ``(d_slots, B, T)`` and rolling by ``t`` lands delay-``d``
+    sums in ring slot ``(t + d) % d_slots``, exactly where the event form's
+    segment ids point.  Delay-0 rows are structurally empty (delays >= 1),
+    so the current slot is read before anything lands in it.
+    """
+    d_slots = delay_range + 1
+    out = sparse_gather(ell_val, ell_idx, x_t.T, interpret=interpret)
+    upd = out.reshape(d_slots, n_target, -1).transpose(0, 2, 1)  # (d,B,T)
+    ring = ring + jnp.roll(upd, t, axis=0)
+    i_t = ring[t % d_slots]
+    ring = ring.at[t % d_slots].set(0.0)
+    return ring, i_t
+
+
+@partial(
+    jax.jit,
+    static_argnames=("delay_range", "n_target", "alpha", "v_th", "interpret"),
+)
+def serial_step_sparse(
+    ell_val,             # (d_slots * T, L) f32 ELL weights
+    ell_idx,             # (d_slots * T, L) i32 ELL source indices
+    state: LIFState,
+    x_t: jnp.ndarray,    # (B, S)
+    t: jnp.ndarray,
+    *,
+    delay_range: int,
+    n_target: int,
+    alpha: float,
+    v_th: float,
+    interpret: bool | None = None,
+):
+    """Sparse serial step — same carry, same outputs, gather + LIF."""
+    ring, i_t = serial_project_sparse(
+        ell_val, ell_idx, state.ring, x_t, t,
         delay_range=delay_range, n_target=n_target, interpret=interpret,
     )
     # fused Pallas LIF update operates (neurons, batch)

@@ -30,7 +30,7 @@ from .cost_model import (
     total,
 )
 from .hw import SpiNNaker2Config, DEFAULT_S2
-from .layer import LayerCharacter, SNNLayer
+from .layer import LayerCharacter, SNNLayer, is_sparse
 
 # --- 32-bit synaptic row packing -------------------------------------------
 # | 31..24 weight magnitude (8b) | 23..20 delay-1 (4b) | 19 type | 18..0 index |
@@ -145,9 +145,11 @@ def serial_pe_count_exact(
     n_src_vertex = len(src_parts)
     src_edges = np.cumsum([0] + src_parts)
     tgt_edges = np.cumsum([0] + tgt_parts)
-    conn = layer.connectivity()
+    if is_sparse(layer):
+        si, ti, _, _ = layer.coo()     # synapse coordinates, no dense array
+    else:
+        si, ti = np.nonzero(layer.connectivity())
     # synapse count per (src_part, tgt_part) cell via 2-D histogram
-    si, ti = np.nonzero(conn)
     cell_counts, _, _ = np.histogram2d(si, ti, bins=[src_edges, tgt_edges])
     pes = 0
     for a, sp in enumerate(src_parts):
@@ -161,31 +163,55 @@ def serial_pe_count_exact(
 def compile_serial(
     layer: SNNLayer, *, hw: SpiNNaker2Config = DEFAULT_S2
 ) -> SerialProgram:
-    """Emit the full event-driven machine graph for one projection."""
+    """Emit the full event-driven machine graph for one projection.
+
+    Accepts dense :class:`SNNLayer` and CSR
+    :class:`~repro.core.layer.SparseProjection` storage alike; the sparse
+    path assigns synapses to cells straight from the COO coordinates and
+    never materializes an ``(S, T)`` array.
+    """
     src_parts = equal_parts(layer.n_source, hw.max_neurons_per_pe)
     tgt_parts = equal_parts(layer.n_target, hw.max_neurons_per_pe)
     n_src_vertex = len(src_parts)
     src_edges = np.cumsum([0] + src_parts)
     tgt_edges = np.cumsum([0] + tgt_parts)
 
+    sparse = is_sparse(layer)
+    if sparse:
+        all_src, all_tgt, all_w, all_d = layer.coo()
+        # coo() is row-major => already sorted by (source, target), the
+        # order the dense path's nonzero() scan produces within each cell
+        cell_a = np.searchsorted(src_edges, all_src, side="right") - 1
+        cell_b = np.searchsorted(tgt_edges, all_tgt, side="right") - 1
+
     cells: List[SerialCell] = []
     for a, sp in enumerate(src_parts):
         s0 = int(src_edges[a])
         for b, tp in enumerate(tgt_parts):
             t0 = int(tgt_edges[b])
-            w = layer.weights[s0 : s0 + sp, t0 : t0 + tp]
-            d = layer.delays[s0 : s0 + sp, t0 : t0 + tp]
-            conn = w != 0.0
+            if sparse:
+                sel = (cell_a == a) & (cell_b == b)
+                si = all_src[sel] - s0
+                ti = all_tgt[sel] - t0
+                w_sel, d_sel = all_w[sel], all_d[sel]
+                rows_per_src = np.bincount(si, minlength=sp)
+                cell_elems = sp * tp
+            else:
+                w = layer.weights[s0 : s0 + sp, t0 : t0 + tp]
+                d = layer.delays[s0 : s0 + sp, t0 : t0 + tp]
+                conn = w != 0.0
+                rows_per_src = conn.sum(axis=1)
+                si, ti = np.nonzero(conn)
+                w_sel, d_sel = w[si, ti], d[si, ti]
+                cell_elems = w.size
 
             # one block per source neuron, rows sorted by (source, target)
-            rows_per_src = conn.sum(axis=1)
             row_start = np.concatenate([[0], np.cumsum(rows_per_src)[:-1]])
             address_list = np.stack(
                 [row_start, rows_per_src], axis=1
             ).astype(np.int64)
 
-            si, ti = np.nonzero(conn)
-            packed = pack_rows(w[si, ti], d[si, ti], ti)
+            packed = pack_rows(w_sel, d_sel, ti)
 
             # single projection => one master-population-table entry per
             # source vertex; entry = (routing key, address-list offset, len)
@@ -202,7 +228,7 @@ def compile_serial(
                 _matrix_split_factor(matrix_bytes, overhead, hw),
             )
             cost = serial_pe_cost(
-                tp, sp, (packed.size / max(1, w.size)), layer.delay_range,
+                tp, sp, (packed.size / max(1, cell_elems)), layer.delay_range,
                 n_src_vertex, hw=hw, matrix_split=k,
             )
             cells.append(

@@ -83,11 +83,12 @@ class CompileReport:
     )
     #: Which serial kernel form the fused executor ran, recorded per launch
     #: shape: ``{(path, batch): (form per layer, ...)}`` with ``path`` in
-    #: ``{"fused", "vmap"}`` and form ``"event"`` | ``"dense"`` for serial
-    #: layers, ``"-"`` for parallel ones.  The dense-fallback crossover
-    #: (:class:`repro.core.cost_model.SerialBatchCostModel`) only ever
-    #: changes which form runs, never the spike trains — this record is how
-    #: tests and benchmarks observe the decision.
+    #: ``{"fused", "vmap"}`` and form ``"event"`` | ``"sparse"`` |
+    #: ``"dense"`` for serial layers, ``"-"`` for parallel ones.  The
+    #: three-way form choice
+    #: (:meth:`repro.core.cost_model.SerialBatchCostModel.choose_form`)
+    #: only ever changes which form runs, never the spike trains — this
+    #: record is how tests and benchmarks observe the decision.
     serial_forms: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )

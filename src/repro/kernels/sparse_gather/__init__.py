@@ -1,0 +1,1 @@
+from .ops import sparse_gather, sparse_gather_ref

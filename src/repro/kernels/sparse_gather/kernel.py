@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: ELL gather-accumulate for sparse synaptic currents.
+
+The serial paradigm's event-driven gather, in the streaming form SpikeStream
+(arxiv 2504.06134) uses on RISC-V clusters: synapses are grouped into
+equal-length ELL rows per (delay-slot, target) pair, and each row gathers its
+source neurons' spike lanes and accumulates ``weight * spike`` across the
+row.  On TPU one grid step owns a block of rows; the spike matrix ``x``
+stays resident in VMEM (it is (S, B) f32 — small next to the weights) while
+the row block's values/indices stream through.
+
+Gathers are expressed as ``jnp.take`` along the source axis, which Mosaic
+lowers to dynamic-slice loads; the accumulate is a row-axis reduction on the
+VPU.  Compare :mod:`repro.kernels.lif_update` for the surrounding dispatch
+idiom.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(val_ref, idx_ref, x_ref, out_ref):
+    val = val_ref[...]                       # (br, L)
+    idx = idx_ref[...]                       # (br, L)
+    x = x_ref[...]                           # (S, B)
+    br, L = val.shape
+    gathered = jnp.take(x, idx.reshape(-1), axis=0).reshape(br, L, x.shape[1])
+    out_ref[...] = (gathered * val[..., None]).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "interpret"))
+def sparse_gather_pallas(
+    ell_val: jnp.ndarray,   # (R, L) f32
+    ell_idx: jnp.ndarray,   # (R, L) i32
+    x: jnp.ndarray,         # (S, B) f32
+    *,
+    br: int = 256,
+    interpret: bool = False,
+):
+    r, l = ell_val.shape
+    s, b = x.shape
+    assert r % br == 0, (ell_val.shape, br)
+    grid = (r // br,)
+    ell_spec = pl.BlockSpec((br, l), lambda i: (i, 0))
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            ell_spec,
+            ell_spec,
+            pl.BlockSpec((s, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, b), jnp.float32),
+        interpret=interpret,
+    )(ell_val, ell_idx, x)

@@ -1,0 +1,45 @@
+"""jit'd public wrapper for the ELL gather-accumulate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import sparse_gather_pallas
+from .ref import sparse_gather_ref
+
+
+def sparse_gather(
+    ell_val: jnp.ndarray,   # (R, L) f32 weights, 0 in padding lanes
+    ell_idx: jnp.ndarray,   # (R, L) i32 source indices, 0 in padding lanes
+    x: jnp.ndarray,         # (S, B) f32 presynaptic spikes
+    *,
+    br: int = 256,
+    interpret: bool | None = None,
+):
+    """``out[r, b] = sum_l ell_val[r, l] * x[ell_idx[r, l], b]``.  (R, B) f32.
+
+    On TPU this runs the Pallas gather kernel.  In auto mode (``interpret
+    is None``) off-TPU the jnp reference runs instead — the same gather +
+    exact-integer f32 accumulate, bit-identical, without interpreter
+    overhead in the per-timestep hot loop.  Pass ``interpret=True`` to
+    force the Pallas kernel body through the interpreter (CI coverage of
+    the TPU path).
+    """
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return sparse_gather_ref(ell_val, ell_idx, x)
+        interpret = False
+    r = ell_val.shape[0]
+    br_eff = min(br, r) if r % min(br, r) == 0 else r
+    pr = (-r) % br_eff
+    if pr:
+        # pad rows with weight-0 / index-0 lanes; sliced off after the call
+        ell_val = jnp.pad(ell_val, ((0, pr), (0, 0)))
+        ell_idx = jnp.pad(ell_idx, ((0, pr), (0, 0)))
+    out = sparse_gather_pallas(
+        ell_val, ell_idx, x, br=br_eff, interpret=interpret
+    )
+    return out[:r]
+
+
+__all__ = ["sparse_gather", "sparse_gather_ref"]

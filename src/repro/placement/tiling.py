@@ -9,9 +9,12 @@ before placement.  This pass rewrites the application graph:
   in offset order;
 * every projection becomes a grid of **block sub-projections** — one per
   (source-tile x target-tile) pair, carrying the corresponding weight /
-  delay sub-matrix.  All-zero blocks are pruned unless a tile would be
-  left with no in-edge at all (which would misread it as an external
-  input).
+  delay sub-matrix.  CSR projections
+  (:class:`~repro.core.layer.SparseProjection`) slice their blocks
+  directly in CSR form (``slice_block``), so tiling a sparse giant never
+  materializes a dense sub-matrix.  All-zero blocks are pruned unless a
+  tile would be left with no in-edge at all (which would misread it as an
+  external input).
 
 The rewrite is **output-preserving by construction** and verified
 bit-exactly by the differential harness (``tests/test_tiling.py``):
@@ -50,7 +53,7 @@ import numpy as np
 
 from ..core.cost_model import equal_parts
 from ..core.hw import DEFAULT_S2, PEUsage, SpiNNaker2Config
-from ..core.layer import Population, Projection, SNNNetwork
+from ..core.layer import Population, Projection, SNNNetwork, is_sparse
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,19 +184,30 @@ def tile_network(
             s = slices[src]
             for b, tgt in enumerate(tiles_of[post]):
                 t = slices[tgt]
-                w = e.weights[s.start : s.start + s.size,
-                              t.start : t.start + t.size]
-                block = Projection(
-                    weights=w.copy(),
-                    delays=e.delays[s.start : s.start + s.size,
-                                    t.start : t.start + t.size].copy(),
-                    delay_range=e.delay_range,
-                    lif=e.lif,
-                    name=f"{e.name}[{a}.{b}]",
-                    pre=src,
-                    post=tgt,
-                )
-                candidates.append((ei, tgt, block, int((w != 0.0).sum())))
+                if is_sparse(e):
+                    # CSR blocks slice directly — a tiled sparse giant
+                    # never materializes any dense sub-matrix
+                    block = e.slice_block(
+                        s.start, s.start + s.size,
+                        t.start, t.start + t.size,
+                        pre=src, post=tgt, name=f"{e.name}[{a}.{b}]",
+                    )
+                    nnz = block.n_synapses
+                else:
+                    w = e.weights[s.start : s.start + s.size,
+                                  t.start : t.start + t.size]
+                    block = Projection(
+                        weights=w.copy(),
+                        delays=e.delays[s.start : s.start + s.size,
+                                        t.start : t.start + t.size].copy(),
+                        delay_range=e.delay_range,
+                        lif=e.lif,
+                        name=f"{e.name}[{a}.{b}]",
+                        pre=src,
+                        post=tgt,
+                    )
+                    nnz = int((w != 0.0).sum())
+                candidates.append((ei, tgt, block, nnz))
 
     keep = [c for c in candidates if c[3] > 0]
     # rescue rule: a tile every in-block of which pruned away must keep

@@ -228,9 +228,14 @@ class ExecutablePool:
         vmapped request-axis path only when ``full_bucket_path`` routes
         full buckets there — so steady-state traffic hits whichever path
         the scheduler's occupancy produces, and a ``"fused"``-pinned
-        pool never compiles vmapped entries it cannot launch.  Returns
-        the number of shapes newly warmed.  After warmup those buckets
-        are all hits and :meth:`relowerings` stays at zero.
+        pool never compiles vmapped entries it cannot launch.  Warmup
+        launches run ``serial_form="auto"``, so each bucket compiles the
+        exact event/sparse/dense kernel forms the cost model will pick
+        for that batch under steady-state traffic (the jit cache is keyed
+        by the form tuple) — sparse-storage models warm their ELL gather
+        entries here, never on the serving hot path.  Returns the number
+        of shapes newly warmed.  After warmup those buckets are all hits
+        and :meth:`relowerings` stays at zero.
         """
         entry = self.entry(name)
         exe = entry.executable          # refreshes the warm set if rebuilt

@@ -153,10 +153,11 @@ def test_unmasked_full_batch_equals_layerwise_reference(mix):
 
 def test_crossover_is_recorded_and_inert():
     """The cost model's form switch is visible in the report, invisible in
-    the outputs: a batch on each side of the crossover runs a different
-    serial kernel but produces identical spike trains."""
-    # sparse + long delays: (D+1)/density is large, so the crossover sits
-    # well above batch 1 and the sweep below straddles it
+    the outputs: batches on both sides of a crossover run different serial
+    kernels but produce identical spike trains — for all three forms."""
+    # sparse + long delays: (D+1)/density is large, so batch 1 stays on
+    # the event form and larger batches move off it (to sparse here —
+    # (D+1)/density > gather_coeff keeps dense out of the argmin)
     layer = random_layer(30, 24, density=0.08, delay_range=4, seed=7)
     layer.lif = LIF
     net = SNNNetwork(layers=[layer])
@@ -178,17 +179,24 @@ def test_crossover_is_recorded_and_inert():
         # the record reflects the launch that just ran: capture the auto
         # pick before the forced runs overwrite the same (path, batch) key
         forms = report.serial_forms[("fused", batch)]
-        want = "dense" if batch >= crossover else "event"
+        want = exe.cost_model.choose_form(
+            meta.n_rows, meta.n_source, meta.n_target,
+            meta.delay_range, batch,
+        )
         assert forms == (want,), (batch, crossover, forms)
         seen.append(want)
-        event = exe.run(sp, serial_form="event")
-        assert report.serial_forms[("fused", batch)] == ("event",)
-        dense = exe.run(sp, serial_form="dense")
-        assert report.serial_forms[("fused", batch)] == ("dense",)
-        for a, b, c in zip(auto, event, dense):
+        forced = {}
+        for form in ("event", "sparse", "dense"):
+            forced[form] = exe.run(sp, serial_form=form)
+            assert report.serial_forms[("fused", batch)] == (form,)
+        for a, b, c, d in zip(
+            auto, forced["event"], forced["sparse"], forced["dense"]
+        ):
             np.testing.assert_array_equal(a, b)
             np.testing.assert_array_equal(a, c)
-    assert seen == ["event", "dense"]     # both sides actually exercised
+            np.testing.assert_array_equal(a, d)
+    assert seen[0] == "event"             # batch 1 keeps event semantics
+    assert len(set(seen)) >= 2, seen      # the argmin actually moved
 
 
 def test_vmap_path_records_forms_separately():

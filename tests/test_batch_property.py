@@ -1,8 +1,8 @@
-"""Hypothesis property: the serial dense-fallback crossover is inert.
+"""Hypothesis property: the serial kernel-form crossover is inert.
 
 Whatever layer geometry and batch size hypothesis draws, switching the
-serial kernel form (event-driven ``segment_sum`` vs dense matmul
-fallback) must change *only* which kernel runs — recorded in
+serial kernel form (event-driven ``segment_sum`` vs ELL gather vs dense
+matmul fallback) must change *only* which kernel runs — recorded in
 ``CompileReport.serial_forms`` — and never the spike trains.  Gated on
 ``hypothesis`` exactly like ``test_property.py`` (the non-random core of
 this invariant also runs ungated in ``test_batch_equivalence.py``).
@@ -33,7 +33,7 @@ LIF = LIFParams(alpha=0.5, v_th=64.0)
     max_examples=15, deadline=None,
     suppress_health_check=[HealthCheck.too_slow],
 )
-def test_dense_fallback_never_changes_outputs(ns, nt, dens, dr, batch, seed):
+def test_form_choice_never_changes_outputs(ns, nt, dens, dr, batch, seed):
     layer = random_layer(ns, nt, dens, dr, seed=seed)
     layer.lif = LIF
     net = SNNNetwork(layers=[layer])
@@ -46,26 +46,24 @@ def test_dense_fallback_never_changes_outputs(ns, nt, dens, dr, batch, seed):
 
     auto = exe.run(spikes)
     # the record reflects the launch that just ran; the auto pick must
-    # match the cost model's crossover decision for this batch
+    # match the cost model's three-way form choice for this batch
     meta = exe.metas[0]
-    want = (
-        "dense"
-        if exe.cost_model.prefer_dense(
-            meta.n_rows, meta.n_source, meta.n_target, meta.delay_range,
-            batch,
-        )
-        else "event"
+    want = exe.cost_model.choose_form(
+        meta.n_rows, meta.n_source, meta.n_target, meta.delay_range, batch
     )
     assert report.serial_forms[("fused", batch)] == (want,)
 
     event = exe.run(spikes, serial_form="event")
     assert report.serial_forms[("fused", batch)] == ("event",)
+    sparse = exe.run(spikes, serial_form="sparse")
+    assert report.serial_forms[("fused", batch)] == ("sparse",)
     dense = exe.run(spikes, serial_form="dense")
     assert report.serial_forms[("fused", batch)] == ("dense",)
 
-    for a, b, c in zip(auto, event, dense):
+    for a, b, c, d in zip(auto, event, sparse, dense):
         np.testing.assert_array_equal(a, b)   # crossover never changes bits
         np.testing.assert_array_equal(a, c)
+        np.testing.assert_array_equal(a, d)
 
 
 @given(

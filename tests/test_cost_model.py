@@ -102,6 +102,85 @@ class TestEqualParts:
             assert max(parts) - min(parts) <= 1
 
 
+class TestChooseForm:
+    """Three-way serial kernel-form choice (event / sparse / dense)."""
+
+    def _forms_by_density(self, cm, *, S=200, T=200, dr=3, batch=8):
+        elems = S * (dr + 1) * T
+        forms = []
+        for density in (0.001, 0.01, 0.05, 0.1, 0.3, 0.6, 1.0):
+            n_rows = max(1, int(elems / (dr + 1) * density))
+            forms.append(cm.choose_form(n_rows, S, T, dr, batch))
+        return forms
+
+    def test_monotone_in_density_at_fixed_batch(self):
+        """More rows per dense element only ever moves the pick toward
+        dense: once dense appears it stays, and the non-dense pick never
+        flips (event vs sparse depends on batch, not density)."""
+        from repro.core.cost_model import DEFAULT_SERIAL_BATCH_COST as cm
+
+        for batch in (1, 2, 8, 64):
+            forms = self._forms_by_density(cm, batch=batch)
+            dense_flags = [f == "dense" for f in forms]
+            assert dense_flags == sorted(dense_flags), (batch, forms)
+            non_dense = {f for f in forms if f != "dense"}
+            assert len(non_dense) <= 1, (batch, forms)
+
+    def test_batch_one_is_event_and_large_batch_leaves_it(self):
+        from repro.core.cost_model import DEFAULT_SERIAL_BATCH_COST as cm
+
+        assert cm.choose_form(500, 100, 100, 4, 1) == "event"
+        # linear sparse/dense always overtake the B^1.5 scatter eventually
+        assert cm.choose_form(500, 100, 100, 4, 4096) != "event"
+
+    def test_sparse_wins_when_dense_cannot_pay_for_density(self):
+        """dense < sparse iff d_slots/density < gather_coeff; a 0.1%-dense
+        layer never earns the dense matmul at any batch."""
+        from repro.core.cost_model import DEFAULT_SERIAL_BATCH_COST as cm
+
+        S = T = 1000
+        dr = 1
+        n_rows = int(S * T * 0.001 * dr)  # ~0.1% density
+        for batch in (4, 64, 1024):
+            assert cm.choose_form(n_rows, S, T, dr, batch) == "sparse"
+
+    def test_dense_cap_excludes_dense_outright(self):
+        from repro.core.cost_model import SerialBatchCostModel
+
+        cm = SerialBatchCostModel(dense_element_cap=10)
+        assert not cm.dense_fits(4, 3, 1)   # 4*2*3 = 24 > 10
+        # fully dense layer at a huge batch — dense would win on cost,
+        # but the operand may not exist
+        assert cm.choose_form(24, 4, 3, 1, 4096) == "sparse"
+
+    def test_empty_layer_is_event(self):
+        from repro.core.cost_model import DEFAULT_SERIAL_BATCH_COST as cm
+
+        assert cm.choose_form(0, 64, 64, 4, 512) == "event"
+
+    def test_tie_breaks_toward_cheaper_memory(self):
+        from repro.core.cost_model import SerialBatchCostModel
+
+        # event == sparse == dense at every batch -> event (cheapest memory)
+        cm = SerialBatchCostModel(scatter_coeff=24.0, batch_exponent=1.0)
+        for batch in (1, 7, 100):
+            assert cm.event_cost(1, batch) == cm.sparse_cost(1, batch)
+            assert cm.sparse_cost(1, batch) == cm.dense_cost(4, 3, 1, batch)
+            assert cm.choose_form(1, 4, 3, 1, batch) == "event"
+        # sparse == dense (R*gather == S*d_slots*T), event losing -> sparse
+        cm = SerialBatchCostModel()
+        assert cm.sparse_cost(1, 3) == cm.dense_cost(4, 3, 1, 3)
+        assert cm.event_cost(1, 3) > cm.sparse_cost(1, 3)
+        assert cm.choose_form(1, 4, 3, 1, 3) == "sparse"
+
+    def test_as_dict_records_three_way_constants(self):
+        from repro.core.cost_model import DEFAULT_SERIAL_BATCH_COST as cm
+
+        d = cm.as_dict()
+        assert d["gather_coeff"] == 24.0
+        assert d["dense_element_cap"] == float(2 ** 24)
+
+
 class TestSerialBatchCostFit:
     """`SerialBatchCostModel.fit_from_sweep` — the tools/fit_cost_model.py
     refit math (ROADMAP: track the current backend, not hard-coded fits)."""

@@ -1,0 +1,116 @@
+"""Hypothesis properties for CSR sparse storage.
+
+Whatever geometry hypothesis draws — empty rows, fully-zero projections,
+densities from 0.1% to 50% — CSR storage must (a) round-trip exactly
+through ``from_dense`` / ``densify`` and (b) launch bit-identically to
+its densified twin on the fused executor, under every forced kernel
+form.  Gated on ``hypothesis`` exactly like ``test_batch_property.py``
+(the non-random core of these invariants runs ungated in
+``test_sparse_equivalence.py``).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Population, SwitchingCompiler, random_layer
+from repro.core.layer import (
+    LIFParams,
+    SNNNetwork,
+    SparseProjection,
+    random_sparse_projection,
+)
+from repro.core.runtime import network_executable
+from repro.core.switching import CompileReport
+
+LIF = LIFParams(alpha=0.5, v_th=64.0)
+
+
+@given(
+    ns=st.integers(1, 32),
+    nt=st.integers(1, 32),
+    dens=st.sampled_from([0.0, 0.001, 0.05, 0.5]),
+    dr=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+    gran=st.sampled_from(["source", "synapse"]),
+)
+@settings(
+    max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+def test_round_trip_from_dense_is_exact(ns, nt, dens, dr, seed, gran):
+    """densify(from_dense(W)) reproduces W elementwise — weights
+    everywhere, delays on every connected slot."""
+    layer = random_layer(ns, nt, density=dens, delay_range=dr, seed=seed,
+                         delay_granularity=gran)
+    sp = SparseProjection.from_dense(layer, pre="a", post="b")
+    assert sp.n_synapses == int(layer.connectivity().sum())
+    back = sp.densify()
+    np.testing.assert_array_equal(back.weights, layer.weights)
+    mask = layer.connectivity()
+    np.testing.assert_array_equal(back.delays[mask], layer.delays[mask])
+    # and the CSR invariants hold whatever the draw produced (empty rows,
+    # zero-synapse projections, single neurons ...)
+    assert sp.indptr[0] == 0 and sp.indptr[-1] == sp.n_synapses
+    assert (np.diff(sp.indptr) >= 0).all()
+
+
+@given(
+    ns=st.integers(2, 24),
+    nt=st.integers(2, 24),
+    dens=st.sampled_from([0.001, 0.05, 0.5]),
+    dr=st.integers(1, 5),
+    batch=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+@settings(
+    max_examples=12, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+def test_sparse_launch_bit_identical_to_densified(ns, nt, dens, dr, batch,
+                                                  seed):
+    """A CSR net and the net built from its densified twin produce the
+    same spike trains on the fused path, under auto and every forced
+    serial kernel form."""
+    a, b = Population("prop.a", ns), Population("prop.b", nt)
+    proj = random_sparse_projection(a, b, dens, dr, seed=seed)
+    proj.lif = LIF
+    net = SNNNetwork(populations=[a, b], projections=[proj])
+    dnet = SNNNetwork(populations=[a, b], projections=[proj.densify()])
+    exe = network_executable(net, CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(net.layers[0])]
+    ))
+    dexe = network_executable(dnet, CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(dnet.layers[0])]
+    ))
+    rng = np.random.default_rng(seed)
+    spikes = (rng.random((6, batch, ns)) < 0.4).astype(np.float32)
+    base = dexe.run(spikes)
+    for form in (None, "event", "sparse", "dense"):
+        got = exe.run(spikes) if form is None else exe.run(
+            spikes, serial_form=form
+        )
+        for x, y in zip(got, base):
+            np.testing.assert_array_equal(x, y)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_fully_zero_projection_is_silent(seed):
+    """A zero-synapse CSR projection compiles, launches on every form,
+    and never spikes."""
+    a, b = Population("z.a", 9), Population("z.b", 7)
+    proj = random_sparse_projection(a, b, 0.0, 3, seed=seed)
+    proj.lif = LIF
+    assert proj.n_synapses == 0
+    net = SNNNetwork(populations=[a, b], projections=[proj])
+    exe = network_executable(net, CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(net.layers[0])]
+    ))
+    spikes = np.ones((4, 2, 9), np.float32)
+    for form in (None, "event", "sparse", "dense"):
+        got = exe.run(spikes) if form is None else exe.run(
+            spikes, serial_form=form
+        )
+        assert got[0].sum() == 0
