@@ -125,8 +125,74 @@ def run() -> dict:
             f"cut traffic rr={rr.cost:.1f} -> search={refined.cost:.1f} "
             f"(-{improvement:.0%})",
         )
+    section["scaffold-measured"] = _scaffold_measured()
     _merge_json({"placement": section})
     return section
+
+
+def _scaffold_measured() -> dict:
+    """Place a generated cerebellum with *measured* activity rates.
+
+    Runs a scaffold slice through the fused executor, profiles the trains
+    (:func:`profile_run`), and feeds the measured per-population rates
+    into the traffic estimate — asserting the measured-rate cut-traffic
+    estimate actually differs from the uniform-rate default (the profiler
+    plumbing is live, not dropped on the floor) and that the placement
+    respects an activity budget sized from the measurement.
+    """
+    from repro.core.runtime import profile_run
+    from repro.placement import check_activity_budgets, place_network
+    from repro.scaffold import build_cerebellum, compile_scaffold
+
+    sc = build_cerebellum(800, seed=5)
+    report = compile_scaffold(sc)
+    spikes = sc.stimulus(16, 2, seed=6)
+    _, profile = profile_run(sc.network, report, spikes)
+    rates = profile.rates()
+
+    tiled = tile_network(sc.network, max_neurons=120)
+    biggest = max(s.size for s in tiled.tile_slices.values())
+    hw = dataclasses.replace(DEFAULT_S2, max_neurons_per_pe=biggest + 120)
+    grid = CoreGrid(rows=4, cols=4, hw=hw)
+
+    uniform = estimate_traffic(tiled)
+    measured = estimate_traffic(tiled, rates)
+    assert not np.allclose(uniform, measured), (
+        "measured rates must change the traffic estimate"
+    )
+    placed = place_network(tiled, grid, rates)
+    # activity budgets: the measured per-core packet load must pass a
+    # budget sized above the observed peak core (and the dimension binds
+    # — an impossibly tight budget trips it)
+    per_core = check_activity_budgets(
+        tiled, placed.assignment, grid.budget, rates
+    )
+    from repro.core.hw import BudgetExceeded, PEBudget
+
+    peak = max(per_core.values())
+    tight = dataclasses.replace(grid.budget, max_in_packets=peak / 2)
+    try:
+        check_activity_budgets(tiled, placed.assignment, tight, rates)
+        raise AssertionError("tight activity budget must trip")
+    except BudgetExceeded:
+        pass
+    drift = float(
+        np.abs(measured - uniform).sum() / max(uniform.sum(), 1e-9)
+    )
+    csv_row(
+        "placement_scaffold-measured", 0.0,
+        f"traffic drift uniform->measured {drift:.0%}, "
+        f"peak core {peak:.1f} pkts/step",
+    )
+    return {
+        "tiles": len(tiled.network.populations),
+        "uniform_traffic": round(float(uniform.sum()), 3),
+        "measured_traffic": round(float(measured.sum()), 3),
+        "traffic_drift": round(drift, 4),
+        "cost_measured_rates": round(placed.cost, 3),
+        "peak_core_in_packets": round(peak, 3),
+        "rates": {k: round(v, 5) for k, v in sorted(rates.items())},
+    }
 
 
 if __name__ == "__main__":

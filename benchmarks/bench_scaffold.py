@@ -1,0 +1,153 @@
+"""Cerebellum scaffold scale trajectory: 1k -> 100k neurons.
+
+The standing scale benchmark of the procedural cerebellum generator
+(:mod:`repro.scaffold`): for each size it builds the network, compiles
+with the scale-aware per-projection policies (over-the-dense-cap CSR
+projections MUST go serial; everything else gets the paper's two-way
+``ideal`` measurement), runs Poisson-driven inference end-to-end through
+the fused scan, and profiles the activity.  Asserted, not just recorded:
+
+* every size has >= 2 external input populations (mossy + climbing);
+* every over-cap projection compiled on the serial paradigm and launched
+  on a **sparse-safe** kernel form (event/sparse — never the dense
+  fallback);
+* the run produces spikes (the threshold calibration keeps the scaffold
+  neither silent nor saturated: mean rates inside (0, 0.95)).
+
+Merged into ``BENCH_network.json`` under ``"scaffold_scale"``: per-size
+runtime, paradigm mix, launch forms, synapse counts, and the measured
+per-population activity rates.
+
+``PYTHONPATH=src python -m benchmarks.bench_scaffold [--fast]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.layer import DENSE_ELEMENT_CAP
+from repro.core.runtime import network_executable, profile_run
+from repro.scaffold import build_cerebellum, compile_scaffold
+
+from .common import csv_row
+
+_JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_network.json"
+
+#: The standing trajectory (ISSUE 9 acceptance: 1k/10k/50k/100k).
+SIZES_FULL = (1_000, 10_000, 50_000, 100_000)
+#: CI mode: small sizes, same code path, seconds not minutes.
+SIZES_FAST = (1_000, 5_000)
+
+
+def _merge_json(update: dict) -> None:
+    data = {}
+    if _JSON_PATH.exists():
+        try:
+            data = json.loads(_JSON_PATH.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data.update(update)
+    _JSON_PATH.write_text(json.dumps(data, indent=2) + "\n")
+
+
+def _bench_size(n: int, steps: int, batch: int) -> dict:
+    t0 = time.perf_counter()
+    sc = build_cerebellum(n, seed=2024)
+    build_s = time.perf_counter() - t0
+    net = sc.network
+    assert len(net.input_indices) >= 2, "scaffold must be multi-input"
+
+    over_cap = [
+        i for i, e in enumerate(net.projections)
+        if e.n_source * e.n_target > DENSE_ELEMENT_CAP
+    ]
+    t0 = time.perf_counter()
+    report = compile_scaffold(sc)
+    compile_s = time.perf_counter() - t0
+    paradigms = [l.paradigm for l in report.layers]
+    for i in over_cap:
+        assert paradigms[i] == "serial", (
+            f"over-cap projection {net.projections[i].name} must compile "
+            f"serial; got {paradigms[i]}"
+        )
+
+    exe = network_executable(net, report)
+    spikes = sc.stimulus(steps, batch, seed=7)
+    t0 = time.perf_counter()
+    outs, profile = profile_run(net, report, spikes)
+    first_launch_s = time.perf_counter() - t0     # includes jit lowering
+    t0 = time.perf_counter()
+    exe.run(spikes)
+    steady_s = time.perf_counter() - t0
+
+    forms = report.serial_forms[("fused", batch)]
+    for i in over_cap:
+        assert forms[i] in ("event", "sparse"), (
+            f"over-cap projection {net.projections[i].name} launched on "
+            f"form {forms[i]!r} — dense may not exist at this scale"
+        )
+    rates = profile.rates()
+    for name, r in rates.items():
+        assert 0.0 <= r < 0.95, f"{name} saturated at rate {r:.3f}"
+    assert sum(profile.total(p.name) for p in net.populations) > 0, (
+        "scaffold run produced no spikes at all"
+    )
+
+    row = {
+        "neurons": sc.total_neurons,
+        "synapses": sc.total_synapses,
+        "n_input_pops": len(net.input_indices),
+        "n_input": net.n_input,
+        "steps": steps,
+        "batch": batch,
+        "build_s": round(build_s, 3),
+        "compile_s": round(compile_s, 3),
+        "first_launch_s": round(first_launch_s, 3),
+        "steady_s": round(steady_s, 3),
+        "us_per_step": round(steady_s / steps * 1e6, 1),
+        "paradigms": {
+            e.name: p for e, p in zip(net.projections, paradigms)
+        },
+        "serial_mix": {
+            "serial": paradigms.count("serial"),
+            "parallel": paradigms.count("parallel"),
+        },
+        "forms": {e.name: f for e, f in zip(net.projections, forms)},
+        "rates": {k: round(v, 5) for k, v in sorted(rates.items())},
+        "peak_granule": dict(
+            zip(("t", "count"), profile.peak("granule"))
+        ),
+    }
+    csv_row(
+        f"scaffold_{n}", steady_s / steps * 1e6,
+        f"{sc.total_synapses} syn, "
+        f"{row['serial_mix']['serial']}s/{row['serial_mix']['parallel']}p, "
+        f"granule rate {rates['granule']:.3f}",
+    )
+    return row
+
+
+def run(fast: bool = False) -> dict:
+    sizes = SIZES_FAST if fast else SIZES_FULL
+    steps, batch = (5, 1) if fast else (10, 1)
+    section = {
+        "mode": "fast" if fast else "full",
+        "sizes": {str(n): _bench_size(n, steps, batch) for n in sizes},
+    }
+    _merge_json({"scaffold_scale": section})
+    return section
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--fast", action="store_true",
+        help="CI mode: small sizes, few steps",
+    )
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(fast=args.fast)

@@ -17,6 +17,8 @@
   serving  -> bench_serving          (batched Poisson serving -> BENCH_serving.json)
   placement-> bench_placement        (NoC cut traffic: search vs round-robin
               -> BENCH_network.json "placement")
+  scaffold -> bench_scaffold         (cerebellum generator scale trajectory
+              1k-100k -> BENCH_network.json "scaffold_scale")
 
 ``PYTHONPATH=src python -m benchmarks.run [--fast] [--seeds N]``
 """
@@ -43,6 +45,7 @@ def main() -> None:
         bench_marginals,
         bench_network,
         bench_placement,
+        bench_scaffold,
         bench_serving,
         bench_sparse,
         bench_switching,
@@ -63,6 +66,7 @@ def main() -> None:
     bench_sparse.run(fast=args.fast)
     bench_serving.run()
     bench_placement.run()
+    bench_scaffold.run(fast=args.fast)
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
 
 

@@ -102,15 +102,25 @@ class PEBudget:
     #: 152 PEs, so a handful of multicast trees per core is the realistic
     #: regime — kept generous by default and tightened by tests.
     max_fan_in: int = 128
+    #: Incoming multicast packets per timestep one core can absorb
+    #: (spike-processing headroom).  ``None`` disables the dimension —
+    #: it only binds when measured activity is available to book against
+    #: it (:func:`repro.placement.mapper.check_activity_budgets`).
+    max_in_packets: float | None = None
 
     @classmethod
     def from_config(
-        cls, hw: SpiNNaker2Config = DEFAULT_S2, *, max_fan_in: int = 128
+        cls,
+        hw: SpiNNaker2Config = DEFAULT_S2,
+        *,
+        max_fan_in: int = 128,
+        max_in_packets: float | None = None,
     ) -> "PEBudget":
         return cls(
             max_neurons=hw.max_neurons_per_pe,
             dtcm_bytes=float(hw.dtcm_bytes - hw.os_overhead_bytes),
             max_fan_in=max_fan_in,
+            max_in_packets=max_in_packets,
         )
 
 
@@ -127,13 +137,20 @@ class PEUsage:
     neurons: int = 0
     synapse_bytes: float = 0.0
     fan_in: int = 0
+    in_packets: float = 0.0
 
     def add(
-        self, *, neurons: int = 0, synapse_bytes: float = 0.0, fan_in: int = 0
+        self,
+        *,
+        neurons: int = 0,
+        synapse_bytes: float = 0.0,
+        fan_in: int = 0,
+        in_packets: float = 0.0,
     ) -> "PEUsage":
         self.neurons += neurons
         self.synapse_bytes += synapse_bytes
         self.fan_in += fan_in
+        self.in_packets += in_packets
         return self
 
     def merge(self, other: "PEUsage") -> "PEUsage":
@@ -141,6 +158,7 @@ class PEUsage:
             neurons=other.neurons,
             synapse_bytes=other.synapse_bytes,
             fan_in=other.fan_in,
+            in_packets=other.in_packets,
         )
 
     def overcommits(self, budget: PEBudget) -> Tuple[str, ...]:
@@ -152,6 +170,11 @@ class PEUsage:
             over.append("dtcm")
         if self.fan_in > budget.max_fan_in:
             over.append("fan_in")
+        if (
+            budget.max_in_packets is not None
+            and self.in_packets > budget.max_in_packets
+        ):
+            over.append("in_packets")
         return tuple(over)
 
     def fits(self, budget: PEBudget) -> bool:
@@ -185,9 +208,11 @@ def check_core(
         raise BudgetExceeded(
             f"{where}aggregate load (neurons={total.neurons}, "
             f"synapse_bytes={total.synapse_bytes:.0f}, "
-            f"fan_in={total.fan_in}) exceeds {', '.join(over)} budget "
+            f"fan_in={total.fan_in}, in_packets={total.in_packets:.2f}) "
+            f"exceeds {', '.join(over)} budget "
             f"(max_neurons={budget.max_neurons}, "
             f"dtcm_bytes={budget.dtcm_bytes:.0f}, "
-            f"max_fan_in={budget.max_fan_in})"
+            f"max_fan_in={budget.max_fan_in}, "
+            f"max_in_packets={budget.max_in_packets})"
         )
     return total

@@ -549,8 +549,16 @@ class SNNNetwork:
     tiled self-loop connect tile pairs in both directions, which no total
     order could classify uniformly on its own.
 
-    Exactly one population may have no incoming projections — it is the
-    **input population** driven by the external spike train.
+    Populations with no incoming projections are **input populations**,
+    driven by the external spike train; a graph needs at least one.  A
+    multi-input graph (e.g. a cerebellum scaffold with mossy- and
+    climbing-fiber sources) consumes ONE concatenated external train of
+    width ``n_input`` — the input populations' slots in **declared
+    order**, with :attr:`input_slices` giving each population's
+    ``(start, stop)`` columns.  Single-input graphs keep the exact
+    pre-multi-input surface (``input_index`` / ``input_population``),
+    and their concatenated train is trivially the one train it always
+    was, so existing callers are bit-identical.
 
     Graph-form construction validates eagerly.  The chain form defers
     graph synthesis until a graph query (topology, runtime) needs it, so
@@ -673,7 +681,9 @@ class SNNNetwork:
             self._populations
         ) - 1:
             return False
-        cur = self._populations[self.input_index].name
+        if len(self.input_indices) != 1:
+            return False
+        cur = self._populations[self.input_indices[0]].name
         for pre, post in self._endpoints:
             if pre != cur:
                 return False
@@ -769,14 +779,13 @@ class SNNNetwork:
             for p in range(n)
         )
         sources = [p for p in range(n) if not self._in_edges[p]]
-        if len(sources) != 1:
-            names = [self._populations[p].name for p in sources]
+        if not sources:
             raise ValueError(
-                "the application graph needs exactly one population with "
-                f"no incoming projections (the external input); got "
-                f"{names or 'none'}"
+                "the application graph needs at least one population with "
+                "no incoming projections (an external input); got none"
             )
-        self._input_index: int = sources[0]
+        # declared order == external-train slot order (see class docstring)
+        self._input_indices: Tuple[int, ...] = tuple(sources)
 
     @staticmethod
     def _stalled_cycle_pick(unplaced: List[int], preds: List[set]) -> int:
@@ -835,23 +844,61 @@ class SNNNetwork:
         return self._in_edges
 
     @property
-    def input_index(self) -> int:
-        """Declared index of the population the external train drives."""
+    def input_indices(self) -> Tuple[int, ...]:
+        """Declared indices of all input populations (no in-edges), in
+        declared order — the order of their slots in the concatenated
+        external train."""
         self._ensure_graph()
-        return self._input_index
+        return self._input_indices
+
+    @property
+    def input_index(self) -> int:
+        """Declared index of THE input population.
+
+        Single-input compatibility surface; raises for multi-input
+        graphs — use :attr:`input_indices` / :attr:`input_slices` there.
+        """
+        self._ensure_graph()
+        if len(self._input_indices) != 1:
+            names = [self._populations[p].name for p in self._input_indices]
+            raise ValueError(
+                f"graph has {len(names)} input populations {names}; "
+                "input_index is only defined for single-input graphs — "
+                "use input_indices/input_slices"
+            )
+        return self._input_indices[0]
 
     def population_index(self, name: str) -> int:
         self._ensure_graph()
         return self._pop_index[name]
 
     @property
+    def input_populations(self) -> List[Population]:
+        """All input populations, in external-train slot order."""
+        return [self.populations[i] for i in self.input_indices]
+
+    @property
     def input_population(self) -> Population:
         return self.populations[self.input_index]
 
     @property
+    def input_slices(self) -> Tuple[Tuple[int, int], ...]:
+        """Per input population (aligned with :attr:`input_indices`): its
+        ``(start, stop)`` columns in the concatenated external train."""
+        self._ensure_graph()
+        out, start = [], 0
+        for i in self._input_indices:
+            size = self._populations[i].size
+            out.append((start, start + size))
+            start += size
+        return tuple(out)
+
+    @property
     def n_input(self) -> int:
-        """Width of the external spike train (input population size)."""
-        return self.populations[self.input_index].size
+        """Width of the external spike train (summed input population
+        sizes; a single-input graph's train is just that population)."""
+        self._ensure_graph()
+        return sum(self._populations[i].size for i in self._input_indices)
 
     def population_lif(self, pop: int) -> LIFParams:
         """Effective LIF parameters for one population (declared index).

@@ -28,6 +28,7 @@ from .executor import (
     validate_spike_outputs,
 )
 from .network import run_network, run_network_layerwise
+from .profiler import ActivityProfile, profile_outputs, profile_run
 
 from . import parallel_runtime as _par_rt
 from . import serial_runtime as _ser_rt
@@ -61,4 +62,5 @@ __all__ = [
     "get_layer_executable", "network_executable",
     "release_network_executable",
     "lowering_counts", "lowering_total",
+    "ActivityProfile", "profile_outputs", "profile_run",
 ]

@@ -148,13 +148,16 @@ class GraphPlan:
     """Static (hashable) application-graph structure baked into the scan.
 
     Population indices are the network's *declared* indices; only the
-    iteration order (``update_order``) is topological.  The input
-    population carries dummy LIF constants (it has no neural update —
-    its "spikes" are the external train).
+    iteration order (``update_order``) is topological.  Input populations
+    carry dummy LIF constants (they have no neural update — their
+    "spikes" are slices of the external train: input population
+    ``input_pops[k]`` reads columns ``input_slices[k]`` of the
+    concatenated ``(T, B, n_input)`` train, declared order).
     """
 
     pop_sizes: Tuple[int, ...]
-    input_pop: int                        # declared index of the input pop
+    input_pops: Tuple[int, ...]           # declared indices of input pops
+    input_slices: Tuple[Tuple[int, int], ...]  # per input pop: train columns
     update_order: Tuple[int, ...]         # non-input pops, topological order
     pop_alpha: Tuple[float, ...]
     pop_vth: Tuple[float, ...]
@@ -168,7 +171,9 @@ class GraphPlan:
 def _graph_plan(net: SNNNetwork) -> GraphPlan:
     """Extract the static execution plan from the application graph."""
     n = len(net.populations)
-    update_order = tuple(p for p in net.topo_order if p != net.input_index)
+    input_pops = net.input_indices
+    input_set = frozenset(input_pops)
+    update_order = tuple(p for p in net.topo_order if p not in input_set)
     alpha, vth = [0.0] * n, [1.0] * n
     for p in update_order:
         lif = net.population_lif(p)
@@ -177,7 +182,8 @@ def _graph_plan(net: SNNNetwork) -> GraphPlan:
     proj_src = tuple(net.population_index(pre) for pre, _ in endpoints)
     return GraphPlan(
         pop_sizes=tuple(p.size for p in net.populations),
-        input_pop=net.input_index,
+        input_pops=input_pops,
+        input_slices=net.input_slices,
         update_order=update_order,
         pop_alpha=tuple(alpha),
         pop_vth=tuple(vth),
@@ -198,7 +204,8 @@ def _chain_plan(metas: Tuple[LayerMeta, ...]) -> GraphPlan:
     n = len(metas) + 1
     return GraphPlan(
         pop_sizes=(metas[0].n_source,) + tuple(m.n_target for m in metas),
-        input_pop=0,
+        input_pops=(0,),
+        input_slices=((0, metas[0].n_source),),
         update_order=tuple(range(1, n)),
         pop_alpha=(0.0,) + tuple(m.alpha for m in metas),
         pop_vth=(1.0,) + tuple(m.v_th for m in metas),
@@ -294,7 +301,8 @@ def _scan_network(
     def step(carry, x_t):
         t, proj_states, pop_v, pop_z, feedback = carry
         pop_out = [None] * len(plan.pop_sizes)
-        pop_out[plan.input_pop] = x_t
+        for p, (a, b) in zip(plan.input_pops, plan.input_slices):
+            pop_out[p] = x_t if (a, b) == (0, x_t.shape[1]) else x_t[:, a:b]
         new_proj = list(proj_states)
         new_v, new_z = list(pop_v), list(pop_z)
         for p in plan.update_order:
@@ -503,8 +511,8 @@ class NetworkExecutable:
 
     @property
     def n_input(self) -> int:
-        """Width of the external spike train (input population size)."""
-        return self.plan.pop_sizes[self.plan.input_pop]
+        """Width of the external spike train (summed input pop sizes)."""
+        return sum(b - a for a, b in self.plan.input_slices)
 
     # -- serial kernel-form selection ----------------------------------------
     def serial_forms(

@@ -1,0 +1,160 @@
+"""Activity profiler: per-population spike counts from real runs.
+
+SpiNNCer's headline analysis — and the signal the placement engine needs
+— is *where the spikes actually are*: per-population, per-timestep spike
+counts and the multicast traffic each projection puts on the NoC.  The
+profiler derives all of it from trains a run already produced (the
+external input plus the executor's per-projection outputs), so profiling
+adds **zero** cost to the launch itself — it is a numpy pass over
+arrays the caller already holds.
+
+Two entry points:
+
+* :func:`profile_outputs` — pure function from recorded trains to an
+  :class:`ActivityProfile`;
+* :func:`profile_run` — launch-and-profile wrapper around
+  :meth:`NetworkExecutable.run` that also attaches the profile to the
+  report (``CompileReport.activity``), so downstream consumers (the
+  placement benchmark, activity-budget checks) find it where the other
+  launch records live.
+
+The profile's :meth:`ActivityProfile.rates` dict plugs straight into
+:func:`repro.placement.mapper.estimate_traffic` and
+:func:`repro.placement.mapper.check_activity_budgets`, closing the loop
+from measured activity to tile budgets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["ActivityProfile", "profile_outputs", "profile_run"]
+
+
+@dataclasses.dataclass
+class ActivityProfile:
+    """Measured spike activity of one recorded run.
+
+    Counts are exact integer sums over the recorded trains (spikes are
+    0/1 floats, so float64 summation is exact): ``pop_counts[name][t]``
+    is the number of spikes population ``name`` emitted at timestep
+    ``t``, summed over the batch.  Input populations are counted from
+    their slice of the external train; every other population from the
+    train of one of its in-projections (all in-projections of a
+    population share the target's train, so any one of them is the
+    population's output).
+    """
+
+    steps: int
+    batch: int
+    pop_sizes: Dict[str, int]
+    #: population -> (T,) spike counts per timestep (batch-summed)
+    pop_counts: Dict[str, np.ndarray]
+    #: projection name -> mean source spikes per timestep per batch lane
+    #: (each firing source neuron puts one multicast packet on the NoC)
+    proj_traffic: Dict[str, float]
+
+    def rates(self) -> Dict[str, float]:
+        """Population -> mean spikes per neuron per timestep.
+
+        The measured-activity dict
+        :func:`repro.placement.mapper.estimate_traffic` weighs cut edges
+        by.
+        """
+        denom = float(self.steps * self.batch)
+        return {
+            name: float(c.sum()) / (denom * self.pop_sizes[name])
+            if denom and self.pop_sizes[name] else 0.0
+            for name, c in self.pop_counts.items()
+        }
+
+    def peak(self, name: str) -> Tuple[int, int]:
+        """``(timestep, count)`` of population ``name``'s busiest step."""
+        c = self.pop_counts[name]
+        t = int(np.argmax(c))
+        return t, int(c[t])
+
+    def total(self, name: str) -> int:
+        """Total spikes population ``name`` emitted across the run."""
+        return int(self.pop_counts[name].sum())
+
+    def as_dict(self) -> dict:
+        """JSON-ready summary (rates, peaks, traffic) for benchmarks."""
+        return {
+            "steps": self.steps,
+            "batch": self.batch,
+            "rates": self.rates(),
+            "peaks": {
+                name: {"t": self.peak(name)[0], "count": self.peak(name)[1]}
+                for name in self.pop_counts
+            },
+            "proj_traffic": dict(self.proj_traffic),
+        }
+
+
+def profile_outputs(
+    net, spikes: np.ndarray, outs: Sequence
+) -> ActivityProfile:
+    """Build an :class:`ActivityProfile` from recorded trains.
+
+    ``spikes`` is the external train ``(T, B, n_input)`` (multi-input
+    nets: the concatenated train, sliced per ``net.input_slices``);
+    ``outs`` the per-projection output trains of the same run (entry i =
+    projection i's target-population train, the
+    :meth:`NetworkExecutable.run` return shape).  Use full-batch
+    unmasked trains — padded slots would count as silence.
+    """
+    spikes = np.asarray(spikes)
+    T, B, n_in = spikes.shape
+    if n_in != net.n_input:
+        raise ValueError(
+            f"spikes must be (T, B, {net.n_input}); got {spikes.shape}"
+        )
+    pop_sizes = {p.name: p.size for p in net.populations}
+    pop_counts: Dict[str, np.ndarray] = {}
+    for p, (a, b) in zip(net.input_populations, net.input_slices):
+        pop_counts[p.name] = spikes[:, :, a:b].sum(axis=(1, 2))
+    pop_trains: Dict[str, np.ndarray] = {}
+    for (_, post), z in zip(net.endpoints, outs):
+        pop_trains.setdefault(post, np.asarray(z))
+    for name, z in pop_trains.items():
+        pop_counts[name] = z.sum(axis=(1, 2))
+    missing = [p.name for p in net.populations if p.name not in pop_counts]
+    if missing:
+        raise ValueError(
+            f"populations {missing} have neither an input slice nor an "
+            "in-projection train — cannot profile"
+        )
+    proj_traffic = {
+        e.name: float(pop_counts[pre].sum()) / float(T * B) if T * B else 0.0
+        for e, (pre, _) in zip(net.projections, net.endpoints)
+    }
+    return ActivityProfile(
+        steps=T,
+        batch=B,
+        pop_sizes=pop_sizes,
+        pop_counts=pop_counts,
+        proj_traffic=proj_traffic,
+    )
+
+
+def profile_run(
+    net, report, spikes: np.ndarray, **run_kwargs
+) -> Tuple[List[np.ndarray], ActivityProfile]:
+    """Run the fused executor and profile the trains it produced.
+
+    Launches through :func:`network_executable`'s cached handle (so
+    profiling reuses the report's lowered executable), converts the
+    outputs to numpy once, builds the profile, and attaches it as
+    ``report.activity``.  Returns ``(outs, profile)``; the outs are the
+    same per-projection trains a plain ``run`` would give.
+    """
+    from .executor import network_executable
+
+    exe = network_executable(net, report)
+    outs = [np.asarray(z) for z in exe.run(np.asarray(spikes), **run_kwargs)]
+    profile = profile_outputs(net, spikes, outs)
+    report.activity = profile
+    return outs, profile

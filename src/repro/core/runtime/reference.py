@@ -131,7 +131,10 @@ def run_graph_reference(net, spikes: np.ndarray) -> list:
       timestep (the one-step-delayed feedback path), so a back-edge spike
       of synaptic delay ``d`` arrives ``d + 1`` steps after emission;
     * a population sums the currents of all its in-projections before one
-      LIF update (``v' = i + alpha*v - z*v_th``; ``z' = v' >= v_th``).
+      LIF update (``v' = i + alpha*v - z*v_th``; ``z' = v' >= v_th``);
+    * multi-input graphs consume the concatenated ``(T, B, n_input)``
+      train — each input population reads its ``net.input_slices``
+      columns, exactly like the fused executor.
 
     All weights are int8-magnitude integers, so every accumulation is an
     exact float32 integer and the result is **bit-identical** to the
@@ -162,11 +165,14 @@ def run_graph_reference(net, spikes: np.ndarray) -> list:
     z = {p: np.zeros((B, sizes[p]), np.float32) for p in range(len(sizes))}
     prev = [np.zeros((B, s), np.float32) for s in sizes]
     pop_trains = [np.zeros((T, B, s), np.float32) for s in sizes]
+    input_set = set(net.input_indices)
+    in_slices = list(zip(net.input_indices, net.input_slices))
     for t in range(T):
         cur = [None] * len(sizes)
-        cur[net.input_index] = spikes[t]
+        for p, (a, b) in in_slices:
+            cur[p] = spikes[t][:, a:b]
         for p in net.topo_order:
-            if p == net.input_index:
+            if p in input_set:
                 continue
             lif = net.population_lif(p)
             alpha, v_th = np.float32(lif.alpha), np.float32(lif.v_th)

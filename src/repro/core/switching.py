@@ -100,6 +100,14 @@ class CompileReport:
     placement: object = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    #: The :class:`repro.core.runtime.profiler.ActivityProfile` of the
+    #: last profiled run (attached by
+    #: :func:`repro.core.runtime.profiler.profile_run`), or ``None`` when
+    #: no run was profiled.  Its per-population rates feed the placement
+    #: engine's measured-traffic estimates and activity budget checks.
+    activity: object = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def total_pes(self) -> int:

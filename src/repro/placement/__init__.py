@@ -11,6 +11,7 @@ from .mapper import (
     LinearMapping,
     Placement,
     PlacementError,
+    check_activity_budgets,
     estimate_traffic,
     greedy_place,
     measured_rates,
@@ -32,6 +33,7 @@ __all__ = [
     "TileSlice",
     "TiledNetwork",
     "build_device_assignment",
+    "check_activity_budgets",
     "estimate_traffic",
     "greedy_place",
     "measured_rates",

@@ -41,7 +41,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.hw import PEUsage
+from ..core.hw import PEUsage, check_core
 from .grid import CoreGrid
 from .tiling import TiledNetwork
 
@@ -125,9 +125,15 @@ def measured_rates(net, spikes: np.ndarray, outs: Sequence) -> Dict[str, float]:
     per-projection trains of the same run (entry i = projection i's
     target population).  Returns population name -> mean spikes per
     neuron per timestep — the measured activity the traffic model weighs
-    cut edges by.
+    cut edges by.  Multi-input nets slice the concatenated train per
+    input population (``net.input_slices``), so each external source
+    gets its own measured rate.
     """
-    rates = {net.input_population.name: float(np.asarray(spikes).mean())}
+    spikes = np.asarray(spikes)
+    rates = {
+        p.name: float(spikes[:, :, a:b].mean())
+        for p, (a, b) in zip(net.input_populations, net.input_slices)
+    }
     for (_, post), z in zip(net.endpoints, outs):
         rates.setdefault(post, float(np.asarray(z).mean()))
     return rates
@@ -157,9 +163,16 @@ def estimate_traffic(
             rate = rates.get(
                 tiled.tile_slices[pre].population, default_rate
             )
-        active = int(e.connectivity().any(axis=1).sum())
-        traffic[j] = float(rate) * active
+        traffic[j] = float(rate) * _active_sources(e)
     return traffic
+
+
+def _active_sources(e) -> int:
+    """Source neurons with >= 1 synapse in the block (CSR: occupied rows
+    straight off the row pointer — no densification)."""
+    if hasattr(e, "indptr"):
+        return int((np.diff(e.indptr) > 0).sum())
+    return int(e.connectivity().any(axis=1).sum())
 
 
 def noc_cost(
@@ -175,6 +188,47 @@ def noc_cost(
         if a != b:
             cost += float(traffic[j]) * grid.hop_distance(a, b)
     return cost
+
+
+def check_activity_budgets(
+    tiled: TiledNetwork,
+    assignment: Dict[str, int],
+    budget,
+    rates: Optional[Dict[str, float]] = None,
+    *,
+    default_rate: float = DEFAULT_RATE,
+) -> Dict[int, float]:
+    """Check per-core incoming spike traffic against ``max_in_packets``.
+
+    Books every tiled projection's expected packets per timestep
+    (:func:`estimate_traffic`, ideally with measured ``rates`` from an
+    :class:`~repro.core.runtime.profiler.ActivityProfile`) onto the core
+    its **target** tile is assigned to, then runs the aggregate
+    :func:`~repro.core.hw.check_core` per core with the tile's static
+    usage included.  Raises :class:`~repro.core.hw.BudgetExceeded` on the
+    first core whose activity over-commits ``budget.max_in_packets``
+    (a ``None`` budget never binds).  Returns core -> booked packets per
+    timestep — the activity heat-map of the placement.
+    """
+    traffic = estimate_traffic(tiled, rates, default_rate=default_rate)
+    net = tiled.network
+    per_core: Dict[int, float] = {}
+    loads: Dict[int, list] = {}
+    for name in assignment:
+        loads.setdefault(assignment[name], []).append(
+            tiled.tile_usage(name)
+        )
+    for j, (pre, post) in enumerate(net.endpoints):
+        core = assignment[post]
+        if assignment[pre] == core:
+            continue        # same-core delivery never crosses the NoC
+        per_core[core] = per_core.get(core, 0.0) + float(traffic[j])
+    for core, packets in per_core.items():
+        check_core(
+            loads.get(core, []) + [PEUsage(in_packets=packets)],
+            budget, core=core,
+        )
+    return per_core
 
 
 # -- feasibility --------------------------------------------------------------

@@ -138,12 +138,16 @@ def _tile_populations(
     pops: List[Population] = []
     tiles_of: Dict[str, Tuple[str, ...]] = {}
     slices: Dict[str, TileSlice] = {}
+    # NO input population is ever tiled — each stays one tile so the
+    # tiled graph's input set (and its concatenated train layout) matches
+    # the original exactly, multi-input graphs included
+    input_set = set(net.input_indices)
     for idx, p in enumerate(net.populations):
-        if idx == net.input_index or p.size <= max_neurons:
+        if idx in input_set or p.size <= max_neurons:
             parts = [p.size]
         else:
             parts = equal_parts(p.size, max_neurons)
-        lif = p.lif if idx == net.input_index else net.population_lif(idx)
+        lif = p.lif if idx in input_set else net.population_lif(idx)
         names, start = [], 0
         for sz in parts:
             name = p.name if len(parts) == 1 else f"{p.name}@{start}"
@@ -213,9 +217,9 @@ def tile_network(
     # rescue rule: a tile every in-block of which pruned away must keep
     # one (empty) block, or the graph would misread it as an input source
     driven = {c[1] for c in keep}
-    input_tile = net.populations[net.input_index].name
+    input_tiles = {net.populations[i].name for i in net.input_indices}
     for c in candidates:
-        if c[1] != input_tile and c[1] not in driven:
+        if c[1] not in input_tiles and c[1] not in driven:
             keep.append(c)
             driven.add(c[1])
     # restore declaration order after the rescue appends

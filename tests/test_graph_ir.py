@@ -125,22 +125,46 @@ def test_graph_validates_endpoints_and_shapes():
         )
 
 
-def test_graph_requires_exactly_one_input_population():
+def test_graph_requires_at_least_one_input_population():
     a, b, c = _pops(("a", 6), ("b", 6), ("c", 6))
-    # two inputs: a and b both have no in-edges
-    with pytest.raises(ValueError, match="exactly one population"):
-        SNNNetwork(
-            populations=[a, b, c],
-            projections=[_proj(a, c, seed=0), _proj(b, c, seed=1)],
-        )
     # no input: every population has an in-edge (2-cycle + driven c)
-    with pytest.raises(ValueError, match="exactly one population"):
+    with pytest.raises(ValueError, match="at least one population"):
         SNNNetwork(
             populations=[a, b, c],
             projections=[
                 _proj(a, b, seed=0), _proj(b, a, seed=1), _proj(b, c, seed=2),
             ],
         )
+
+
+def test_multi_input_graph_surface():
+    """Two source populations are legal: both are identified as inputs,
+    the external train is their concatenation in declared order, and the
+    single-input compat surface refuses rather than guessing."""
+    a, b, c = _pops(("a", 6), ("b", 4), ("c", 6))
+    net = SNNNetwork(
+        populations=[a, b, c],
+        projections=[_proj(a, c, seed=0), _proj(b, c, seed=1)],
+    )
+    assert net.input_indices == (0, 1)
+    assert [p.name for p in net.input_populations] == ["a", "b"]
+    assert net.input_slices == ((0, 6), (6, 10))
+    assert net.n_input == 10
+    assert not net.is_chain
+    with pytest.raises(ValueError, match="input populations"):
+        net.input_index
+    with pytest.raises(ValueError, match="input populations"):
+        net.input_population
+
+
+def test_single_input_graph_keeps_compat_surface():
+    a, b = _pops(("a", 6), ("b", 5))
+    net = SNNNetwork(populations=[a, b], projections=[_proj(a, b, seed=0)])
+    assert net.input_indices == (0,)
+    assert net.input_index == 0
+    assert net.input_population.name == "a"
+    assert net.input_slices == ((0, 6),)
+    assert net.n_input == 6
 
 
 def test_topological_order_ignores_declaration_order():

@@ -182,6 +182,52 @@ def test_traffic_model_rates():
             assert silent[j] == 0.0
 
 
+def test_measured_rates_multi_input_per_population():
+    """Multi-input nets get one measured rate per external source — each
+    sliced out of the concatenated train, not one global mean."""
+    net, _ = build_net("multi_input-recurrent")
+    spikes = np.zeros((4, 1, net.n_input), np.float32)
+    (a0, b0), (a1, b1) = net.input_slices
+    spikes[:, :, a0:b0] = 1.0              # mossy always fires
+    spikes[:, :, a1:b1] = 0.0              # climbing silent
+    outs = [np.zeros((4, 1, l.n_target), np.float32) for l in net.layers]
+    rates = measured_rates(net, spikes, outs)
+    assert rates["mossy"] == 1.0
+    assert rates["climbing"] == 0.0
+
+
+def test_activity_budget_check_binds_on_in_packets():
+    """check_activity_budgets books cross-core spike traffic per target
+    core; an over-tight max_in_packets trips BudgetExceeded, a None
+    budget never binds."""
+    import dataclasses
+
+    from repro.placement import check_activity_budgets
+
+    net, _ = build_net("self-loop")
+    tiled = tile_network(net, max_neurons=7)
+    # cap cores at ~2 tiles so the placement actually spreads (all tiles
+    # on one core would cut nothing and book nothing)
+    biggest = max(s.size for s in tiled.tile_slices.values())
+    hw = dataclasses.replace(DEFAULT_S2, max_neurons_per_pe=biggest + 7)
+    grid = CoreGrid(rows=3, cols=3, hw=hw)
+    pl = place_network(tiled, grid)
+    per_core = check_activity_budgets(
+        tiled, pl.assignment, grid.budget
+    )                                      # None budget: never binds
+    assert per_core and all(v >= 0 for v in per_core.values())
+    # same-core blocks are free: everything on one core books nothing
+    one_core = {t: 0 for t in pl.assignment}
+    assert check_activity_budgets(
+        tiled, one_core, grid.budget
+    ) == {}
+    tight = dataclasses.replace(
+        grid.budget, max_in_packets=max(per_core.values()) / 2
+    )
+    with pytest.raises(BudgetExceeded, match="in_packets"):
+        check_activity_budgets(tiled, pl.assignment, tight)
+
+
 # -- partition ----------------------------------------------------------------
 
 def test_identity_assignment_on_one_device():

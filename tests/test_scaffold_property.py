@@ -1,0 +1,124 @@
+"""Property tests for the scaffold generator and the activity profiler.
+
+The generator's contract: same ``(n_neurons, seed, spec)`` -> the
+byte-identical network (in-process and across interpreter processes),
+anatomically bounded convergence, and no undriven population at any
+scale.  The profiler's contract: its counts are *exactly* ``np.sum``
+over the oracle's spike trains — no estimation anywhere.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.layer import is_sparse
+from repro.core.runtime import profile_outputs, run_graph_reference
+from repro.scaffold import CEREBELLUM, build_cerebellum
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+SETTINGS = settings(
+    max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _digest(sc) -> str:
+    """SHA-256 over every array of every projection plus the size table."""
+    h = hashlib.sha256()
+    h.update(repr(sorted(sc.sizes.items())).encode())
+    for e in sc.network.projections:
+        assert is_sparse(e), e.name
+        for arr in (e.indptr, e.indices, e.values, e.delay_values):
+            h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+@SETTINGS
+@given(
+    n=st.integers(min_value=80, max_value=600),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_seed_determinism_in_process(n, seed):
+    """Same knob + seed -> byte-identical network, twice in one process."""
+    assert _digest(build_cerebellum(n, seed=seed)) == _digest(
+        build_cerebellum(n, seed=seed)
+    )
+
+
+@SETTINGS
+@given(
+    n=st.integers(min_value=80, max_value=1500),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_convergence_ratio_bounds(n, seed):
+    """Realized synapse counts track the spec's convergence: nnz is a
+    Binomial(S*T, min(1, conv/S)) draw, pinned within 6 sigma + slack."""
+    sc = build_cerebellum(n, seed=seed)
+    by_name = {f"{pre}->{post}": e for e, (pre, post) in zip(
+        sc.network.projections, sc.network.endpoints
+    )}
+    for espec in sc.spec.projections:
+        key = f"{espec.pre}->{espec.post}"
+        e = by_name[key]
+        S, T = e.n_source, e.n_target
+        p = min(1.0, espec.convergence / S)
+        mean = S * T * p
+        slack = 6.0 * np.sqrt(mean * (1.0 - p)) + 10.0
+        assert abs(e.n_synapses - mean) <= slack, (key, e.n_synapses, mean)
+        # the recorded realized convergence is exactly density * S
+        assert sc.convergence[key] == pytest.approx(p * S)
+
+
+@SETTINGS
+@given(
+    n=st.integers(min_value=80, max_value=1500),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_no_undriven_populations(n, seed):
+    """Every non-input population receives at least one synapse; inputs
+    are exactly the spec's fiber sources, in declared order."""
+    sc = build_cerebellum(n, seed=seed)
+    net = sc.network
+    assert [p.name for p in net.input_populations] == ["mossy", "climbing"]
+    inputs = set(net.input_indices)
+    for i, p in enumerate(net.populations):
+        if i in inputs:
+            continue
+        assert sum(
+            net.projections[j].n_synapses for j in net.in_edges[i]
+        ) > 0, p.name
+
+
+@SETTINGS
+@given(
+    n=st.integers(min_value=80, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    steps=st.integers(min_value=1, max_value=8),
+)
+def test_profiler_counts_equal_oracle_sums(n, seed, steps):
+    """Profiler counts == np.sum over the oracle's spike trains, exactly:
+    per population, per timestep, and in the per-projection traffic."""
+    sc = build_cerebellum(n, seed=seed)
+    net = sc.network
+    spikes = sc.stimulus(steps, 2, seed=seed ^ 0x5EED)
+    outs = run_graph_reference(net, spikes)
+    prof = profile_outputs(net, spikes, outs)
+    assert prof.steps == steps and prof.batch == 2
+    trains = {}
+    for p, (a, b) in zip(net.input_populations, net.input_slices):
+        trains[p.name] = spikes[:, :, a:b]
+    for (_, post), z in zip(net.endpoints, outs):
+        trains.setdefault(post, z)
+    for name, z in trains.items():
+        np.testing.assert_array_equal(
+            prof.pop_counts[name], np.sum(z, axis=(1, 2))
+        )
+        assert prof.total(name) == int(np.sum(z))
+        t, c = prof.peak(name)
+        assert c == int(np.sum(z[t]))
+    for e, (pre, _) in zip(net.projections, net.endpoints):
+        assert prof.proj_traffic[e.name] == pytest.approx(
+            float(np.sum(trains[pre])) / (steps * 2)
+        )

@@ -49,13 +49,23 @@ GEOMETRIES = {
         [("in", "big", 0.15, 2), ("big", "out", 0.1, 3)],
         1909,
     ),
+    # multi_input: two external sources (both above the tiling budget, so
+    # the input exemption — never tile ANY input population — is load-
+    # bearing), fan-in onto a recurrent hidden population, plus a skip
+    "multi_input-recurrent": (
+        [("mossy", 12), ("climbing", 9), ("h", 18), ("out", 8)],
+        [("mossy", "h", 0.4, 2), ("climbing", "h", 0.4, 2),
+         ("h", "h", 0.3, 2), ("h", "out", 0.5, 2),
+         ("climbing", "out", 0.3, 1)],
+        2011,
+    ),
 }
 
 #: Per-geometry neuron budget: small enough that every hidden population
 #: splits.  "wide-chain" uses the real SpiNNaker2 default (255), so one
 #: fixture exercises tiling at the paper's actual per-PE capacity.
 BUDGETS = {"self-loop": 7, "long-back-edge": 6, "skip-and-loop": 5,
-           "wide-chain": None}
+           "wide-chain": None, "multi_input-recurrent": 6}
 
 _CACHE = {}
 
@@ -198,6 +208,23 @@ def test_tile_usage_accounts_every_in_block():
         assert u.neurons == tiled.tile_slices[p.name].size
         assert u.fan_in == len(tn.in_edges[p_idx])
         assert u.synapse_bytes > 0
+
+
+def test_multi_input_populations_never_tiled():
+    """NO input population is ever split — both external sources exceed
+    the budget yet stay single tiles, so the tiled graph's input set and
+    concatenated-train layout match the original exactly (the regression:
+    only 'the' single input used to be exempt)."""
+    net, _ = build_net("multi_input-recurrent")
+    tiled = tile_network(net, max_neurons=6)
+    tn = tiled.network
+    for name in ("mossy", "climbing"):
+        assert tiled.tiles_of[name] == (name,)
+    assert [p.name for p in tn.input_populations] == ["mossy", "climbing"]
+    assert tn.input_slices == net.input_slices
+    assert tn.n_input == net.n_input
+    # hidden/output populations did split
+    assert len(tiled.tiles_of["h"]) > 1 and len(tiled.tiles_of["out"]) > 1
 
 
 # -- random_projection seed determinism ---------------------------------------
