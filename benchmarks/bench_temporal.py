@@ -1,0 +1,217 @@
+"""Temporal-parallel (whole-train) paradigm vs the fused per-step scan.
+
+Every prior launch path walks the train one ``lax.scan`` iteration per
+timestep, so wall-clock grows with T regardless of layer size.  The
+temporal paradigm (``NetworkExecutable.run_temporal``) projects the
+whole train in one contraction and resolves the spike reset in log
+depth, trading the scan's per-step dispatch for one big launch.  This
+bench sweeps the step count 16 -> 512 over two feed-forward fixtures
+(one per exact reset-resolution mode) and records both curves:
+
+* every point is asserted **bit-identical** between the two paths
+  (both fixtures run exact modes — alpha0 and count);
+* the pinned acceptance: temporal beats fused by >= 2x at T >= 256 on
+  at least one fixture;
+* the cost model's four-way ``choose_form(steps=T)`` must never pick
+  temporal at a point where the measurement says fused was faster —
+  checked for the shipped defaults (strict) and for constants refit
+  from this very sweep (``fit_temporal_from_sweep``, with a noise
+  tolerance around the crossover).
+
+Merged into ``BENCH_network.json`` under ``"temporal_sweep"`` so the
+crossover is tracked across PRs and ``tools/fit_cost_model.py`` can
+refit the temporal constants from it.
+
+``PYTHONPATH=src python -m benchmarks.bench_temporal [--fast]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import Population, SwitchingCompiler
+from repro.core.layer import LIFParams, SNNNetwork, random_projection
+from repro.core.runtime import network_executable
+from repro.core.switching import CompileReport
+
+from .common import csv_row, timeit
+
+_JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_network.json"
+
+#: The acceptance pin: from this step count on, the temporal path must
+#: beat the fused per-step scan by at least this factor on one of the
+#: feed-forward fixtures.
+PINNED_STEPS = 256
+PINNED_SPEEDUP = 2.0
+
+
+def _merge_json(update: dict) -> None:
+    """Update ``BENCH_network.json`` in place, keeping other sections."""
+    data = {}
+    if _JSON_PATH.exists():
+        try:
+            data = json.loads(_JSON_PATH.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data.update(update)
+    _JSON_PATH.write_text(json.dumps(data, indent=2) + "\n")
+
+
+def _chain(name: str, alpha: float, v_th: float, *, size: int,
+           density: float, delay_range: int, inhibitory_fraction: float,
+           seed: int):
+    """Feed-forward in -> h -> out chain; returns (net, report, macs)."""
+    a = Population(f"{name}.in", size)
+    b = Population(f"{name}.h", size)
+    c = Population(f"{name}.out", size)
+    p1 = random_projection(a, b, density, delay_range, seed=seed,
+                           inhibitory_fraction=inhibitory_fraction)
+    p2 = random_projection(b, c, density, delay_range, seed=seed + 1,
+                           inhibitory_fraction=inhibitory_fraction)
+    lif = LIFParams(alpha=alpha, v_th=v_th)
+    p1.lif = lif
+    p2.lif = lif
+    net = SNNNetwork(populations=[a, b, c], projections=[p1, p2], name=name)
+    report = CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(p)
+                for p in (p1, p2)]
+    )
+    macs = 2 * size * (delay_range + 1) * size
+    return net, report, macs
+
+
+def run(*, fast: bool = False, batch: int = 4) -> dict:
+    """T-sweep of run_temporal vs the fused scan on exact-mode chains."""
+    print("\n# temporal sweep (whole-train scan vs per-step scan across T)")
+    steps_list = [16, 64, 256] if fast else [16, 32, 64, 128, 256, 512]
+    iters = 2 if fast else 3
+    size, density, delay_range = 128, 0.1, 1
+    # one fixture per exact reset-resolution mode: alpha0 (alpha == 0)
+    # and count (alpha == 1, non-negative weights, integer threshold)
+    fixtures_spec = [
+        ("alpha0-ff", 0.0, 64.0, 0.2, "alpha0"),
+        ("count-ff", 1.0, 64.0, 0.0, "count"),
+    ]
+    sweep = {
+        "batch": batch, "fast": fast, "size": size, "density": density,
+        "delay_range": delay_range, "fixtures": [],
+    }
+    best_pin = 0.0
+    for fi, (name, alpha, v_th, inhib, want_mode) in enumerate(fixtures_spec):
+        net, report, macs = _chain(
+            name, alpha, v_th, size=size, density=density,
+            delay_range=delay_range, inhibitory_fraction=inhib,
+            seed=2000 + 10 * fi,
+        )
+        exe = network_executable(net, report)
+        m = exe.metas[0]
+        fix = {
+            "name": name, "alpha": alpha, "v_th": v_th, "mode": want_mode,
+            "dense_macs_per_batch": macs, "points": [],
+        }
+        for T in steps_list:
+            rng = np.random.default_rng(100 * fi + T)
+            spikes = (
+                rng.random((T, batch, net.n_input)) < 0.1
+            ).astype(np.float32)
+            fused_us = timeit(
+                lambda: jax.block_until_ready(exe.run_device(spikes)),
+                warmup=1, iters=iters,
+            )
+            temporal_us = timeit(
+                lambda: jax.block_until_ready(exe.run_temporal(spikes)),
+                warmup=1, iters=iters,
+            )
+            # both fixtures run exact modes: the trains must be
+            # bit-identical, and the launch record must say so
+            ref = [np.asarray(z) for z in exe.run_device(spikes)]
+            got = [np.asarray(z) for z in exe.run_temporal(spikes)]
+            for pi, (r, g) in enumerate(zip(ref, got)):
+                assert np.array_equal(r, g), (name, T, pi)
+            trec = report.temporal[(batch, T)]
+            assert set(trec.modes.values()) == {want_mode}, trec
+            assert all(v == 1 for v in trec.iterations.values()), trec
+            assert all(v == 0 for v in trec.residual.values()), trec
+            cf = exe.cost_model.choose_form(
+                m.n_rows, m.n_source, m.n_target, m.delay_range, batch,
+                steps=T,
+            )
+            point = {
+                "steps": T, "fused_us": fused_us,
+                "temporal_us": temporal_us,
+                "speedup": fused_us / temporal_us, "choose_form": cf,
+            }
+            # shipped defaults must never pick temporal where it lost
+            if cf == "temporal":
+                assert temporal_us <= fused_us, point
+            fix["points"].append(point)
+            csv_row(
+                f"temporal_{name}_T{T}", temporal_us,
+                f"fused_us={fused_us:.0f};speedup={point['speedup']:.2f}",
+            )
+        crossover = next(
+            (p["steps"] for p in fix["points"]
+             if p["temporal_us"] < p["fused_us"]), None,
+        )
+        fix["crossover_steps"] = crossover
+        fix["speedup_at_pin"] = max(
+            (p["speedup"] for p in fix["points"]
+             if p["steps"] >= PINNED_STEPS), default=0.0,
+        )
+        best_pin = max(best_pin, fix["speedup_at_pin"])
+        # refit the temporal constants from this very sweep and check the
+        # fitted decision tracks the measurement (tolerance: crossover
+        # points are noisy, so "never slower" allows 25% jitter)
+        fitted = exe.cost_model.fit_temporal_from_sweep(
+            fix["points"], dense_macs_per_batch=macs, batch=batch,
+        )
+        fix["fitted"] = {
+            "temporal_coeff": fitted.temporal_coeff,
+            "temporal_base": fitted.temporal_base,
+            "step_coeff": fitted.step_coeff,
+        }
+        for p in fix["points"]:
+            fcf = fitted.choose_form(
+                m.n_rows, m.n_source, m.n_target, m.delay_range, batch,
+                steps=p["steps"],
+            )
+            p["fitted_form"] = fcf
+            if fcf == "temporal":
+                assert p["temporal_us"] <= p["fused_us"] * 1.25, p
+        # ... and that it *does* pick temporal where temporal clearly won
+        decisive = [p for p in fix["points"] if p["speedup"] >= 2.0]
+        if decisive:
+            top = max(decisive, key=lambda p: p["steps"])
+            assert top["fitted_form"] == "temporal", (fix["fitted"], top)
+        sweep["fixtures"].append(fix)
+
+    assert best_pin >= PINNED_SPEEDUP, (
+        f"temporal paradigm won only {best_pin:.2f}x at T>={PINNED_STEPS} "
+        f"(pin: {PINNED_SPEEDUP}x)"
+    )
+    sweep["pinned_steps"] = PINNED_STEPS
+    sweep["pinned_speedup"] = PINNED_SPEEDUP
+    sweep["best_speedup_at_pin"] = best_pin
+    _merge_json({"temporal_sweep": sweep})
+    print(
+        f"wrote {_JSON_PATH.name} temporal_sweep (temporal "
+        f"{best_pin:.1f}x faster than fused at T>={PINNED_STEPS})"
+    )
+    return sweep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer step counts / iters (CI)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,9 @@
   sparse   -> bench_sparse             (event/sparse/dense kernel forms across
               size 1k-50k at SpiNNCer densities -> BENCH_network.json
               "sparse_sweep")
+  temporal -> bench_temporal           (whole-train temporal paradigm vs the
+              fused per-step scan across T=16-512 -> BENCH_network.json
+              "temporal_sweep")
   serving  -> bench_serving          (batched Poisson serving -> BENCH_serving.json)
   placement-> bench_placement        (NoC cut traffic: search vs round-robin
               -> BENCH_network.json "placement")
@@ -49,6 +52,7 @@ def main() -> None:
         bench_serving,
         bench_sparse,
         bench_switching,
+        bench_temporal,
     )
 
     t0 = time.time()
@@ -64,6 +68,7 @@ def main() -> None:
     bench_network.run_batch_sweep()
     bench_network.run_donation()
     bench_sparse.run(fast=args.fast)
+    bench_temporal.run(fast=args.fast)
     bench_serving.run()
     bench_placement.run()
     bench_scaffold.run(fast=args.fast)

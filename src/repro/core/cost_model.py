@@ -163,6 +163,27 @@ class SerialBatchCostModel:
       :meth:`choose_form` outright (mirrors
       ``repro.core.layer.DENSE_ELEMENT_CAP`` — a projection that only
       fits sparse must never pick the form that would densify it).
+
+    Temporal-parallel constants (the fourth, whole-train form of
+    :meth:`choose_form` — only competing when the caller supplies a step
+    count):
+
+    * ``temporal_coeff`` — cost of one whole-train contraction element
+      (per step, per dense MAC) in the temporal form.  The contraction
+      does the same MACs as the dense per-step form but batched over all
+      T steps at once, so the fitted value is typically < ``mac_coeff``.
+    * ``temporal_base`` — fixed per-launch cost of the temporal path
+      (reset resolution, shifts), amortized over the step count.
+    * ``step_coeff`` — per-timestep dispatch overhead of the sequential
+      scan that the temporal form *avoids*; it is added to the serial
+      side of the temporal-vs-serial comparison only, never to the
+      three-way serial argmin, so existing serial decisions are
+      untouched.  Deliberately conservative by default: with equal
+      operand costs the default constants only pick temporal beyond
+      ``temporal_base / step_coeff`` = 256 steps, about an order of
+      magnitude above the crossover ``benchmarks/bench_temporal.py``
+      measures on the CPU backend (temporal already wins at T = 16
+      there).
     """
 
     scatter_coeff: float = 16.0
@@ -170,6 +191,9 @@ class SerialBatchCostModel:
     mac_coeff: float = 1.0
     gather_coeff: float = 24.0
     dense_element_cap: int = 2 ** 24
+    temporal_coeff: float = 1.0
+    temporal_base: float = 16384.0
+    step_coeff: float = 64.0
 
     def event_cost(self, n_rows: int, batch: int) -> float:
         """Relative cost of one event-form timestep at this batch."""
@@ -192,6 +216,52 @@ class SerialBatchCostModel:
         return (
             n_source * (delay_range + 1) * n_target <= self.dense_element_cap
         )
+
+    def temporal_cost(
+        self,
+        n_rows: int,
+        n_source: int,
+        n_target: int,
+        delay_range: int,
+        batch: int,
+        steps: int,
+    ) -> float:
+        """Relative per-timestep cost of the whole-train temporal form.
+
+        The projection runs either as one dense ``(T,B,S) x (d,S,N)``
+        contraction or as the ELL gather vmapped over time — per step
+        that is the dense/sparse element count scaled by
+        ``temporal_coeff``/``gather_coeff`` — plus the fixed per-launch
+        reset-resolution cost amortized over the step count.
+        """
+        sparse = self.gather_coeff * n_rows * float(batch)
+        cost = sparse
+        if self.dense_fits(n_source, n_target, delay_range):
+            dense = (
+                self.temporal_coeff
+                * batch * n_source * (delay_range + 1) * n_target
+            )
+            cost = min(cost, dense)
+        return cost + self.temporal_base / float(max(1, steps))
+
+    def temporal_operand(
+        self,
+        n_rows: int,
+        n_source: int,
+        n_target: int,
+        delay_range: int,
+        batch: int,
+    ) -> str:
+        """Cheaper whole-train operand: ``"dense"`` einsum or ``"sparse"``
+        (ELL gather vmapped over time).  Over the element cap the dense
+        operand may not exist, so sparse is forced."""
+        if not self.dense_fits(n_source, n_target, delay_range):
+            return "sparse"
+        dense = (
+            self.temporal_coeff
+            * batch * n_source * (delay_range + 1) * n_target
+        )
+        return "dense" if dense <= self.gather_coeff * n_rows * batch else "sparse"
 
     def prefer_dense(
         self,
@@ -221,12 +291,25 @@ class SerialBatchCostModel:
         n_target: int,
         delay_range: int,
         batch: int,
+        steps: int | None = None,
+        allow_temporal: bool = True,
     ) -> str:
-        """Cheapest serial kernel form: ``"event"``, ``"sparse"`` or ``"dense"``.
+        """Cheapest serial kernel form: ``"event"``, ``"sparse"``,
+        ``"dense"`` — or ``"temporal"`` when a step count is supplied.
 
-        All three forms are bit-identical on outputs (integer weights,
+        Without ``steps`` (the per-timestep callers) the decision is the
+        exact three-way argmin it has always been.  With ``steps`` the
+        whole-train temporal form competes as a fourth candidate: it wins
+        only when its amortized per-step cost beats the best serial form
+        *plus* the per-step scan overhead the serial forms pay
+        (``step_coeff``) — the overhead never enters the serial forms'
+        own comparison, so the three-way outcome is unchanged by the
+        temporal constants.  Back-edge projections must pass
+        ``allow_temporal=False``: their rings are inherently step-serial.
+
+        All forms are bit-identical on outputs (integer weights,
         exact float32 accumulation), so this is purely a throughput
-        argmin.  Structure of the space:
+        argmin.  Structure of the three-way space:
 
         * batch 1 — event wins (``scatter < gather`` per element and the
           scatter's super-linearity hasn't kicked in yet).
@@ -253,6 +336,13 @@ class SerialBatchCostModel:
                 ("dense", self.dense_cost(n_source, n_target, delay_range, batch))
             )
         best = min(costs, key=lambda fc: fc[1])
+        if steps is None or not allow_temporal:
+            return best[0]
+        tc = self.temporal_cost(
+            n_rows, n_source, n_target, delay_range, batch, steps
+        )
+        if tc < best[1] + self.step_coeff:
+            return "temporal"
         return best[0]
 
     def crossover_batch(
@@ -336,6 +426,92 @@ class SerialBatchCostModel:
             mac_coeff=1.0,
         )
 
+    def fit_gather_from_sweep(
+        self,
+        points,              # [{"batch": b, "event_us": e, "sparse_us": s}]
+    ) -> "SerialBatchCostModel":
+        """Refit ``gather_coeff`` from a measured event/sparse sweep.
+
+        ``points`` compare the event and sparse kernel forms on the SAME
+        rows (``benchmarks/bench_sparse.py`` records them in
+        ``BENCH_network.json.sparse_sweep``); both costs share the factor
+        ``n_rows``, so the coefficient falls straight out of the time
+        ratio: ``gather = scatter * batch^(exponent-1) *
+        geomean(sparse_us / event_us)``.  Other constants are untouched.
+        """
+        pts = [
+            p for p in points
+            if p.get("event_us", 0) > 0 and p.get("sparse_us", 0) > 0
+        ]
+        if not pts:
+            raise ValueError("need at least one event/sparse sweep point")
+        log_ratio = sum(
+            math.log(p["sparse_us"] / p["event_us"])
+            + (self.batch_exponent - 1.0) * math.log(p["batch"])
+            for p in pts
+        ) / len(pts)
+        return dataclasses.replace(
+            self, gather_coeff=self.scatter_coeff * math.exp(log_ratio)
+        )
+
+    def fit_temporal_from_sweep(
+        self,
+        points,              # [{"steps": T, "fused_us": f, "temporal_us": u}]
+        *,
+        dense_macs_per_batch: int,
+        batch: int,
+    ) -> "SerialBatchCostModel":
+        """Refit the temporal constants from a measured T-sweep.
+
+        ``points`` time the fused per-step scan against the whole-train
+        temporal path over the SAME network at several step counts
+        (``benchmarks/bench_temporal.py`` records them in
+        ``BENCH_network.json.temporal_sweep``).  Both curves are
+        ~affine in T, so two least-squares lines
+        ``fused_us ~ f0 + f1*T`` and ``temporal_us ~ g0 + g1*T`` give:
+
+        * ``temporal_coeff = mac_coeff * g1/f1`` — marginal per-step cost
+          ratio, mapped onto the dense MAC unit;
+        * ``temporal_base = g0 * M / f1`` — the temporal launch intercept
+          in cost units (M = dense MACs per step at this batch);
+        * ``step_coeff = max(0, (f1 - g1) * M / f1)`` — the per-step
+          overhead the scan pays and the temporal form avoids.
+        """
+        pts = [
+            p for p in points
+            if p.get("fused_us", 0) > 0 and p.get("temporal_us", 0) > 0
+        ]
+        if len(pts) < 2:
+            raise ValueError("need at least two temporal sweep points")
+        if dense_macs_per_batch <= 0 or batch <= 0:
+            raise ValueError("MAC total and batch must be positive")
+
+        def slope_intercept(ys):
+            xs = [float(p["steps"]) for p in pts]
+            xbar = sum(xs) / len(xs)
+            ybar = sum(ys) / len(ys)
+            denom = sum((x - xbar) ** 2 for x in xs)
+            if denom == 0:
+                raise ValueError("sweep points must span multiple step counts")
+            s = sum(
+                (x - xbar) * (y - ybar) for x, y in zip(xs, ys)
+            ) / denom
+            return s, ybar - s * xbar
+
+        f1, _f0 = slope_intercept([p["fused_us"] for p in pts])
+        g1, g0 = slope_intercept([p["temporal_us"] for p in pts])
+        if f1 <= 0 or g1 <= 0:
+            raise ValueError("sweep slopes must be positive")
+        macs = float(dense_macs_per_batch) * batch
+        # 1 cost unit  <->  f1 / (mac_coeff * macs) microseconds per step
+        unit_us = f1 / (self.mac_coeff * macs)
+        return dataclasses.replace(
+            self,
+            temporal_coeff=self.mac_coeff * g1 / f1,
+            temporal_base=max(0.0, g0) / unit_us,
+            step_coeff=max(0.0, f1 - g1) / unit_us,
+        )
+
     def as_dict(self) -> Dict[str, float]:
         return {
             "scatter_coeff": self.scatter_coeff,
@@ -343,6 +519,9 @@ class SerialBatchCostModel:
             "mac_coeff": self.mac_coeff,
             "gather_coeff": self.gather_coeff,
             "dense_element_cap": float(self.dense_element_cap),
+            "temporal_coeff": self.temporal_coeff,
+            "temporal_base": self.temporal_base,
+            "step_coeff": self.step_coeff,
         }
 
 

@@ -29,6 +29,14 @@ from .executor import (
 )
 from .network import run_network, run_network_layerwise
 from .profiler import ActivityProfile, profile_outputs, profile_run
+from .temporal_runtime import (
+    TemporalReport,
+    choose_temporal_mode,
+    temporal_lif,
+    temporal_project_dense,
+    temporal_project_sparse,
+    temporal_step,
+)
 
 from . import parallel_runtime as _par_rt
 from . import serial_runtime as _ser_rt
@@ -63,4 +71,6 @@ __all__ = [
     "release_network_executable",
     "lowering_counts", "lowering_total",
     "ActivityProfile", "profile_outputs", "profile_run",
+    "TemporalReport", "choose_temporal_mode", "temporal_lif",
+    "temporal_project_dense", "temporal_project_sparse", "temporal_step",
 ]

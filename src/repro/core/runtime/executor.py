@@ -94,6 +94,13 @@ from .serial_runtime import (
     serial_project_sparse,
     sparse_serial_operands,
 )
+from .temporal_runtime import (
+    TemporalReport,
+    choose_temporal_mode,
+    temporal_lif,
+    temporal_project_dense,
+    temporal_project_sparse,
+)
 
 
 def get_layer_executable(
@@ -415,6 +422,167 @@ def _batched_scan(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class TemporalPlan:
+    """The graph plan's temporal-parallel decomposition.
+
+    ``update_order`` splits into three contiguous topological intervals:
+    ``pre`` and ``post`` populations have no back-edge coupling and run
+    whole-train (all T steps at once, carry semantics resolved by the
+    associative scan); the ``block`` interval — from the earliest
+    back-edge target to the latest back-edge source — keeps its
+    step-serial rings and runs through the ordinary fused scan on
+    ``sub_plan``, reading the already-computed ``ext_sources`` trains as
+    its external input.  A pure feed-forward graph has an empty block
+    and runs entirely whole-train.
+    """
+
+    pre: Tuple[int, ...]
+    block: Tuple[int, ...]
+    post: Tuple[int, ...]
+    ext_sources: Tuple[int, ...]      # pops whose trains feed the block
+    sub_plan: GraphPlan | None        # fused-scan plan of the block
+    modes: dict                       # temporal pop -> reset-resolution mode
+
+
+def _temporal_split(plan: GraphPlan):
+    """Split ``update_order`` into (pre, block, post) around back-edges."""
+    order = plan.update_order
+    backs = [i for i, b in enumerate(plan.proj_back) if b]
+    if not backs:
+        return order, (), ()
+    pos = {p: k for k, p in enumerate(order)}
+    lo = min(pos[plan.proj_tgt[i]] for i in backs)
+    # a back-edge source outside update_order (an input population) never
+    # extends the block: its train is external, not produced by the scan
+    hi = max(pos.get(plan.proj_src[i], -1) for i in backs)
+    hi = max(hi, lo)
+    return order[:lo], order[lo : hi + 1], order[hi + 1 :]
+
+
+def _temporal_subplan(plan: GraphPlan, block: Tuple[int, ...]):
+    """The block's fused-scan plan: same populations/projections, but the
+    update order is the block interval and every out-of-block source pop
+    (original inputs and whole-train pre populations alike) becomes an
+    input population reading a column range of the augmented train."""
+    bset = frozenset(block)
+    ext = sorted(
+        {
+            plan.proj_src[ei]
+            for p in block
+            for ei in plan.in_edges[p]
+            if plan.proj_src[ei] not in bset
+        }
+    )
+    slices, off = [], 0
+    for s in ext:
+        w = plan.pop_sizes[s]
+        slices.append((off, off + w))
+        off += w
+    sub = GraphPlan(
+        pop_sizes=plan.pop_sizes,
+        input_pops=tuple(ext),
+        input_slices=tuple(slices),
+        update_order=tuple(block),
+        pop_alpha=plan.pop_alpha,
+        pop_vth=plan.pop_vth,
+        in_edges=plan.in_edges,
+        proj_src=plan.proj_src,
+        proj_tgt=plan.proj_tgt,
+        proj_back=plan.proj_back,
+        back_sources=plan.back_sources,
+    )
+    return tuple(ext), sub
+
+
+def _temporal_network(
+    plan: GraphPlan,
+    metas: Tuple[LayerMeta, ...],
+    forms: Tuple[str, ...],      # per proj: serial forms + "temporal[_sparse]"
+    interpret: bool | None,
+    tplan: TemporalPlan,
+    max_iters: int,
+    params: List[Tuple[jnp.ndarray, ...]],
+    states,                      # block carry (donated); () when no block
+    spikes: jnp.ndarray,         # (T, B, n_input) f32
+    valid_steps: jnp.ndarray | None = None,
+):
+    """Whole-train executor: no scan over feed-forward segments.
+
+    Masking follows the fused path's contract exactly — the input train
+    is masked once up front, intermediate trains run unmasked (padded
+    steps of a causal network can only influence padded outputs), and
+    the per-population outputs are masked once at the end — so the live
+    prefix is bit-identical to a solo run and padded steps emit exact
+    zeros.
+    """
+    live = None
+    if valid_steps is not None:
+        live = (
+            jnp.arange(spikes.shape[0], dtype=jnp.int32)[:, None]
+            < valid_steps[None, :]
+        ).astype(spikes.dtype)[:, :, None]               # (T, B, 1)
+        spikes = spikes * live
+
+    pop_out = [None] * len(plan.pop_sizes)
+    for p, (a, b) in zip(plan.input_pops, plan.input_slices):
+        pop_out[p] = (
+            spikes if (a, b) == (0, spikes.shape[2]) else spikes[:, :, a:b]
+        )
+    aux = {}
+
+    def whole_train(p):
+        i_full = None                                    # (T, B, n) current
+        for ei in plan.in_edges[p]:
+            meta = metas[ei]
+            x = pop_out[plan.proj_src[ei]]
+            if forms[ei] == "temporal_sparse":
+                i_e = temporal_project_sparse(
+                    *params[ei], x, delay_range=meta.delay_range,
+                    n_target=meta.n_target, interpret=interpret,
+                )
+            else:
+                i_e = temporal_project_dense(params[ei][0], x)
+            i_full = i_e if i_full is None else i_full + i_e
+        z, iters, residual = temporal_lif(
+            i_full, alpha=plan.pop_alpha[p], v_th=plan.pop_vth[p],
+            mode=tplan.modes[p], max_iters=max_iters, interpret=interpret,
+        )
+        pop_out[p] = z
+        aux[p] = (iters, residual)
+
+    for p in tplan.pre:
+        whole_train(p)
+    fin = states
+    if tplan.block:
+        aug = [pop_out[s] for s in tplan.ext_sources]
+        aug = aug[0] if len(aug) == 1 else jnp.concatenate(aug, axis=2)
+        block_outs, fin = _scan_network(
+            tplan.sub_plan, metas, forms, interpret, params, states, aug,
+            None,
+        )
+        for p, z in zip(tplan.block, block_outs):
+            pop_out[p] = z
+    for p in tplan.post:
+        whole_train(p)
+
+    outs = tuple(pop_out[p] for p in plan.update_order)
+    if live is not None:
+        outs = tuple(z * live for z in outs)
+    # per-pop reset-resolution telemetry, update_order aligned; (0, 0)
+    # marks a step-serial block population (no fixed point ran)
+    zero = jnp.int32(0)
+    aux_iters = jnp.stack(
+        [aux.get(p, (zero, zero))[0] for p in plan.update_order]
+    )
+    aux_resid = jnp.stack(
+        [aux.get(p, (zero, zero))[1] for p in plan.update_order]
+    )
+    # the block's final carry is returned (and dropped by run_temporal)
+    # so the donated state buffers can alias it, as on the fused path
+    return outs, ((aux_iters, aux_resid), fin)
+
+
 def _param_axes(meta: LayerMeta, form: str) -> Tuple[Tuple, ...]:
     """Logical-axis names per operand array (for ``snn_rules`` placement)."""
     if meta.paradigm == "serial":
@@ -462,6 +630,9 @@ class NetworkExecutable:
         self._fns = {}       # (path, interpret, forms, donate) -> jitted scan
         self._dense = {}     # layer index -> (d_slots, S, T) dense operand
         self._sparse = {}    # layer index -> (ell_val, ell_idx) ELL operands
+        self._temporal = {}  # layer index -> whole-train dense operand
+        self._nonneg = {}    # layer index -> all weights >= 0? (mode pick)
+        self._tplan = None   # cached TemporalPlan (topology, not placement)
         self._mesh = None    # set by shard(); None = identity fallback
         self._rules = None
         #: Device scalar from the last launch: True iff every output
@@ -592,8 +763,116 @@ class NetworkExecutable:
             self._sparse[i] = ell
         return ell
 
+    # -- temporal-parallel structure and forms -------------------------------
+    def _weights_nonneg(self, i: int) -> bool:
+        v = self._nonneg.get(i)
+        if v is None:
+            w = np.asarray(self.params[i][0])   # row_weight | wdm_stack
+            v = bool(w.size == 0 or w.min() >= 0)
+            self._nonneg[i] = v
+        return v
+
+    def _temporal_structure(self) -> TemporalPlan:
+        """The (cached) temporal decomposition of this graph plan."""
+        tp = self._tplan
+        if tp is None:
+            pre, block, post = _temporal_split(self.plan)
+            if block:
+                ext, sub = _temporal_subplan(self.plan, block)
+            else:
+                ext, sub = (), None
+            modes = {}
+            for p in pre + post:
+                nonneg = all(
+                    self._weights_nonneg(ei)
+                    for ei in self.plan.in_edges[p]
+                )
+                modes[p] = choose_temporal_mode(
+                    self.plan.pop_alpha[p], self.plan.pop_vth[p],
+                    nonneg_weights=nonneg,
+                )
+            tp = TemporalPlan(
+                pre=pre, block=block, post=post, ext_sources=ext,
+                sub_plan=sub, modes=modes,
+            )
+            self._tplan = tp
+        return tp
+
+    def temporal_forms(
+        self, batch: int, steps: int, serial_form: str = "auto"
+    ) -> Tuple[str, ...]:
+        """Per-projection form for the temporal launch path.
+
+        Projections targeting the step-serial block keep their ordinary
+        serial form (same three-way choice as :meth:`serial_forms`);
+        projections targeting whole-train populations run ``"temporal"``
+        (one dense whole-train contraction) or ``"temporal_sparse"``
+        (the ELL gather vmapped over time), picked by the cost model's
+        operand comparison — or forced to the matching operand by
+        ``serial_form``.  Like every form, the choice never changes
+        outputs.
+        """
+        tp = self._temporal_structure()
+        bset = frozenset(tp.block)
+        base = self.serial_forms(batch, serial_form)
+        forms = []
+        for i, meta in enumerate(self.metas):
+            if self.plan.proj_tgt[i] in bset:
+                forms.append(base[i])
+                continue
+            if meta.paradigm == "parallel":
+                if not self.cost_model.dense_fits(
+                    meta.n_source, meta.n_target, meta.delay_range
+                ):  # pragma: no cover - parallel compile densifies under cap
+                    raise ValueError(
+                        "parallel projection too large for the whole-train "
+                        "dense operand; run a non-temporal path"
+                    )
+                forms.append("temporal")
+                continue
+            dense_ok = self.cost_model.dense_fits(
+                meta.n_source, meta.n_target, meta.delay_range
+            )
+            if serial_form == "sparse" or not dense_ok:
+                forms.append("temporal_sparse")
+            elif serial_form == "dense":
+                forms.append("temporal")
+            else:
+                operand = self.cost_model.temporal_operand(
+                    meta.n_rows, meta.n_source, meta.n_target,
+                    meta.delay_range, batch,
+                )
+                forms.append(
+                    "temporal" if operand == "dense" else "temporal_sparse"
+                )
+        return tuple(forms)
+
+    def _temporal_param(self, i: int) -> Tuple[jnp.ndarray, ...]:
+        """The whole-train dense operand: the serial dense (d_slots, S, T)
+        weights verbatim, or the parallel WDM stack scattered back into
+        the same delay-stacked layout (integer accumulation — exact)."""
+        meta = self.metas[i]
+        if meta.paradigm == "serial":
+            return self._dense_param(i)
+        w = self._temporal.get(i)
+        if w is None:
+            wdm, col_src, col_dly = (np.asarray(a) for a in self.params[i])
+            w_np = np.zeros(
+                (meta.delay_range + 1, meta.n_source, meta.n_target),
+                np.float32,
+            )
+            np.add.at(w_np, (col_dly, col_src), wdm.T.astype(np.float32))
+            w = self._place(jnp.asarray(w_np), (None, None, "neurons"))
+            self._temporal[i] = w
+        return (w,)
+
     def _params_for(self, forms: Tuple[str, ...]) -> List[Tuple]:
-        per_form = {"dense": self._dense_param, "sparse": self._sparse_param}
+        per_form = {
+            "dense": self._dense_param,
+            "sparse": self._sparse_param,
+            "temporal": self._temporal_param,
+            "temporal_sparse": self._sparse_param,
+        }
         return [
             per_form[form](i) if form in per_form else p
             for i, (form, p) in enumerate(zip(forms, self.params))
@@ -650,6 +929,7 @@ class NetworkExecutable:
             self._rules = None
             self._dense.clear()
             self._sparse.clear()
+            self._temporal.clear()
             self._fns.clear()
             if self.report is not None:
                 self.report.placement = assignment
@@ -672,10 +952,11 @@ class NetworkExecutable:
             )
             for meta, p in zip(self.metas, self.params)
         ]
-        # dense/sparse operands and jitted entries were traced/placed
-        # against the old layout; rebuild all lazily
+        # dense/sparse/temporal operands and jitted entries were traced/
+        # placed against the old layout; rebuild all lazily
         self._dense.clear()
         self._sparse.clear()
+        self._temporal.clear()
         self._fns.clear()
         return self
 
@@ -711,12 +992,23 @@ class NetworkExecutable:
                 )
         return valid_steps
 
-    def _get_fn(self, path: str, interpret, forms: Tuple[str, ...]):
-        key = (path, interpret, forms, self.donate)
+    def _get_fn(
+        self, path: str, interpret, forms: Tuple[str, ...],
+        max_iters: int | None = None,
+    ):
+        key = (path, interpret, forms, self.donate, max_iters)
         fn = self._fns.get(key)
         if fn is None:
-            scan = _batched_scan if path == "vmap" else _scan_network
-            inner = partial(scan, self.plan, self.metas, forms, interpret)
+            if path == "temporal":
+                inner = partial(
+                    _temporal_network, self.plan, self.metas, forms,
+                    interpret, self._temporal_structure(), max_iters,
+                )
+            else:
+                scan = _batched_scan if path == "vmap" else _scan_network
+                inner = partial(
+                    scan, self.plan, self.metas, forms, interpret
+                )
 
             def checked(params, states, spikes, valid_steps):
                 outs, final = inner(params, states, spikes, valid_steps)
@@ -810,6 +1102,73 @@ class NetworkExecutable:
             "vmap", spikes, valid_steps, interpret, serial_form
         )
 
+    def run_temporal(
+        self,
+        spikes: np.ndarray,        # (T, B, n_input) 0/1
+        *,
+        valid_steps: np.ndarray | None = None,   # (B,) true steps per request
+        interpret: bool | None = None,
+        serial_form: str = "auto",
+        max_iters: int | None = None,
+    ) -> Tuple[jnp.ndarray, ...]:
+        """The temporal-parallel path: whole-train, no scan over time.
+
+        Feed-forward populations compute all T timesteps at once — the
+        input train is projected in one contraction and the membrane
+        recurrence resolved in log depth
+        (:mod:`repro.core.runtime.temporal_runtime`); only the back-edge
+        interval of the topological order (empty for feed-forward
+        graphs) falls back to the step-serial fused scan.  Same output
+        layout, masking contract, and bits as :meth:`run_device` in the
+        exact reset modes; iterative populations additionally record
+        their fixed-point pass count and residual in
+        ``report.temporal[(batch, steps)]`` (residual is 0 unless the
+        ``max_iters`` cap — default T+1, which guarantees convergence —
+        cut the loop short).
+        """
+        if not self.metas:
+            return ()
+        valid_steps = self._check_shapes(spikes, valid_steps)
+        steps, batch = int(spikes.shape[0]), int(spikes.shape[1])
+        forms = self.temporal_forms(batch, steps, serial_form)
+        self._record_forms("temporal", batch, forms)
+        cap = int(max_iters) if max_iters else steps + 1
+        fn = self._get_fn("temporal", interpret, forms, max_iters=cap)
+        spikes, valid_steps = self._place_inputs(
+            jnp.asarray(spikes, jnp.float32), valid_steps
+        )
+        tp = self._temporal_structure()
+        states = (
+            _init_graph_carry(tp.sub_plan, self.metas, batch)
+            if tp.block else ()
+        )
+        outs, (aux, _fin), self.last_check = fn(
+            self._params_for(forms), states, spikes, valid_steps
+        )
+        self._record_temporal(batch, steps, cap, aux)
+        slot = {p: k for k, p in enumerate(self.plan.update_order)}
+        return tuple(outs[slot[tgt]] for tgt in self.plan.proj_tgt)
+
+    def _record_temporal(self, batch, steps, cap, aux) -> None:
+        if self.report is None:
+            return
+        tp = self._temporal_structure()
+        iters, resid = (np.asarray(a) for a in aux)
+        order = self.plan.update_order
+        self.report.temporal[(batch, steps)] = TemporalReport(
+            split=(len(tp.pre), len(tp.block), len(tp.post)),
+            modes=dict(tp.modes),
+            iterations={
+                p: int(iters[k]) for k, p in enumerate(order)
+                if p in tp.modes
+            },
+            residual={
+                p: int(resid[k]) for k, p in enumerate(order)
+                if p in tp.modes
+            },
+            max_iters=cap,
+        )
+
     def run(
         self,
         spikes: np.ndarray,        # (T, B, n_input) 0/1
@@ -818,9 +1177,13 @@ class NetworkExecutable:
         interpret: bool | None = None,
         serial_form: str = "auto",
         batched: bool = False,
+        temporal: bool = False,
     ) -> List[np.ndarray]:
         """Returns the per-projection spike trains [(T, B, n_l) ...]."""
-        launch = self.run_batched if batched else self.run_device
+        if temporal:
+            launch = self.run_temporal
+        else:
+            launch = self.run_batched if batched else self.run_device
         outs = launch(
             spikes, valid_steps=valid_steps, interpret=interpret,
             serial_form=serial_form,

@@ -55,6 +55,11 @@ class ActivityProfile:
     #: projection name -> mean source spikes per timestep per batch lane
     #: (each firing source neuron puts one multicast packet on the NoC)
     proj_traffic: Dict[str, float]
+    #: population -> full ``(T, B, n)`` 0/1 spike raster, kept only when
+    #: the profile was built with ``record_rasters=True``; ``None``
+    #: otherwise, so the default profile costs no train-sized memory
+    #: beyond what the caller already held.
+    rasters: Dict[str, np.ndarray] = None
 
     def rates(self) -> Dict[str, float]:
         """Population -> mean spikes per neuron per timestep.
@@ -80,6 +85,37 @@ class ActivityProfile:
         """Total spikes population ``name`` emitted across the run."""
         return int(self.pop_counts[name].sum())
 
+    def isi_histogram(self, name: str) -> np.ndarray:
+        """Inter-spike-interval histogram of population ``name``.
+
+        Returns ``hist`` with ``hist[d]`` = number of consecutive spike
+        pairs ``d`` timesteps apart, pooled over every (batch lane,
+        neuron) pair; ``hist[0]`` is always 0 (a neuron spikes at most
+        once per step).  SpiNNCer's regularity analysis reads straight
+        off this: a ``count``-mode population driven at a constant rate
+        shows one dominant interval, an irregular one a spread.
+
+        Requires a raster (``record_rasters=True`` at profiling time).
+        """
+        if self.rasters is None or name not in self.rasters:
+            raise ValueError(
+                f"no raster recorded for population {name!r} — profile "
+                "with record_rasters=True"
+            )
+        z = self.rasters[name]
+        t, b, n = np.nonzero(np.asarray(z) != 0)
+        hist = np.zeros(self.steps, dtype=np.int64)
+        if t.size < 2:
+            return hist
+        # order spike events by (lane, neuron, time); diffs within a
+        # (lane, neuron) group are the ISIs
+        order = np.lexsort((t, n, b))
+        tb, bb, nb = t[order], b[order], n[order]
+        same = (bb[1:] == bb[:-1]) & (nb[1:] == nb[:-1])
+        isi = (tb[1:] - tb[:-1])[same]
+        np.add.at(hist, isi, 1)
+        return hist
+
     def as_dict(self) -> dict:
         """JSON-ready summary (rates, peaks, traffic) for benchmarks."""
         return {
@@ -95,7 +131,7 @@ class ActivityProfile:
 
 
 def profile_outputs(
-    net, spikes: np.ndarray, outs: Sequence
+    net, spikes: np.ndarray, outs: Sequence, *, record_rasters: bool = False
 ) -> ActivityProfile:
     """Build an :class:`ActivityProfile` from recorded trains.
 
@@ -105,6 +141,11 @@ def profile_outputs(
     projection i's target-population train, the
     :meth:`NetworkExecutable.run` return shape).  Use full-batch
     unmasked trains — padded slots would count as silence.
+
+    ``record_rasters=True`` additionally keeps each population's full
+    ``(T, B, n)`` train on the profile (:attr:`ActivityProfile.rasters`),
+    enabling :meth:`ActivityProfile.isi_histogram`; off by default so
+    the profile's memory footprint is unchanged.
     """
     spikes = np.asarray(spikes)
     T, B, n_in = spikes.shape
@@ -131,17 +172,25 @@ def profile_outputs(
         e.name: float(pop_counts[pre].sum()) / float(T * B) if T * B else 0.0
         for e, (pre, _) in zip(net.projections, net.endpoints)
     }
+    rasters = None
+    if record_rasters:
+        rasters = {}
+        for p, (a, b) in zip(net.input_populations, net.input_slices):
+            rasters[p.name] = spikes[:, :, a:b]
+        rasters.update(pop_trains)
     return ActivityProfile(
         steps=T,
         batch=B,
         pop_sizes=pop_sizes,
         pop_counts=pop_counts,
         proj_traffic=proj_traffic,
+        rasters=rasters,
     )
 
 
 def profile_run(
-    net, report, spikes: np.ndarray, **run_kwargs
+    net, report, spikes: np.ndarray, *, record_rasters: bool = False,
+    **run_kwargs
 ) -> Tuple[List[np.ndarray], ActivityProfile]:
     """Run the fused executor and profile the trains it produced.
 
@@ -150,11 +199,16 @@ def profile_run(
     outputs to numpy once, builds the profile, and attaches it as
     ``report.activity``.  Returns ``(outs, profile)``; the outs are the
     same per-projection trains a plain ``run`` would give.
+    ``record_rasters=True`` keeps the full per-population spike rasters
+    on the profile (ISI analysis); default off — profiling memory is
+    then unchanged from previous releases.
     """
     from .executor import network_executable
 
     exe = network_executable(net, report)
     outs = [np.asarray(z) for z in exe.run(np.asarray(spikes), **run_kwargs)]
-    profile = profile_outputs(net, spikes, outs)
+    profile = profile_outputs(
+        net, spikes, outs, record_rasters=record_rasters
+    )
     report.activity = profile
     return outs, profile

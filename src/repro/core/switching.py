@@ -108,6 +108,16 @@ class CompileReport:
     activity: object = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    #: Temporal-parallel launch records, ``{(batch, steps):
+    #: repro.core.runtime.temporal_runtime.TemporalReport}``.  Each
+    #: ``run_temporal`` launch records its feed-forward/step-serial
+    #: split, the reset-resolution mode per population, and — for
+    #: iterative populations — the fixed-point pass count and residual
+    #: (spike flips between the final two passes; 0 whenever the loop
+    #: converged before the ``max_iters`` cap).
+    temporal: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     @property
     def total_pes(self) -> int:
@@ -124,6 +134,38 @@ class CompileReport:
     @property
     def compile_seconds(self) -> float:
         return sum(l.compile_seconds for l in self.layers)
+
+
+def temporal_character(layer) -> dict:
+    """Temporal-parallel eligibility features for the switching surface.
+
+    Extends the paper's 4-factor :class:`~repro.core.layer.LayerCharacter`
+    with what the third ("temporal") paradigm needs to prejudge a layer:
+    which reset-resolution mode it would run under
+    (:func:`repro.core.runtime.temporal_runtime.choose_temporal_mode`)
+    and whether that mode is exact — exact layers cost one whole-train
+    pass, iterative layers a convergence loop, which is the feature the
+    classifier (and :meth:`SerialBatchCostModel.choose_form
+    <repro.core.cost_model.SerialBatchCostModel.choose_form>` with a step
+    count) weighs against the per-step scan overhead.  Works for dense
+    layers and CSR :class:`~repro.core.layer.SparseProjection` alike.
+    """
+    from .runtime.temporal_runtime import choose_temporal_mode
+
+    weights = getattr(layer, "values", None)
+    if weights is None:
+        weights = layer.weights
+    nonneg = bool(np.all(np.asarray(weights) >= 0))
+    lif = layer.lif
+    mode = choose_temporal_mode(
+        float(lif.alpha), float(lif.v_th), nonneg_weights=nonneg
+    )
+    return {
+        "character": layer.character(),
+        "mode": mode,
+        "exact": mode in ("alpha0", "count"),
+        "nonneg_weights": nonneg,
+    }
 
 
 class SwitchingCompiler:

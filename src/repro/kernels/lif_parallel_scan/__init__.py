@@ -1,0 +1,1 @@
+from .ops import affine_scan_ref, lif_parallel_scan

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: chunked affine membrane scan.
+
+Same state-space-duality move as ``kernels/ssd_chunk``: within a chunk of
+Q timesteps the reset-free recurrence ``v[t] = alpha*v[t-1] + c[t]``
+equals a lower-triangular matmul
+
+    v = L @ c + alpha^(i+1) * v_carry,    L[i, j] = alpha^(i-j)  (i >= j)
+
+so the MXU evaluates Q steps at once.  The grid is
+``(feature_blocks, time_chunks)`` with the time dimension last: TPU
+grids iterate sequentially over the trailing axis, so a VMEM scratch row
+carries ``v[Q-1]`` from one chunk into the next and is reset whenever a
+new feature block starts (``chunk == 0``).
+
+Alpha powers are built by cumulative product, not ``alpha ** k`` — the
+chain of f32 multiplies is exact for alpha in {0, 1} and for dyadic
+alpha inside the f32 window, which is what keeps the kernel bit-identical
+to the sequential scan under the repo's integer-weight invariant.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(c_ref, v_ref, carry_ref, *, alpha, q):
+    chunk = pl.program_id(1)
+
+    @pl.when(chunk == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    c = c_ref[...]                                     # (Q, Fb)
+    al = jnp.float32(alpha)
+    # pw[k] = alpha^k by exact cumulative product (pw[0] = 1).
+    pw = jnp.concatenate(
+        [jnp.ones((1,), jnp.float32),
+         jnp.cumprod(jnp.full((q - 1,), al, jnp.float32))]
+    )                                                  # (Q,)
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    diff = row - col
+    lmat = jnp.where(
+        diff >= 0, jnp.take(pw, jnp.maximum(diff, 0)), 0.0
+    )                                                  # (Q, Q) lower-tri
+    v = jax.lax.dot_general(
+        lmat, c, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    v = v + (pw * al)[:, None] * carry_ref[...]        # alpha^(i+1) * carry
+    v_ref[...] = v
+    carry_ref[...] = v[q - 1 : q, :]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "chunk", "bf", "interpret"))
+def affine_scan_pallas(
+    c: jnp.ndarray,        # (T, F) f32, T % chunk == 0, F % bf == 0
+    *,
+    alpha: float,
+    chunk: int = 128,
+    bf: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    steps, feat = c.shape
+    grid = (feat // bf, steps // chunk)
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, alpha=alpha, q=chunk),
+        grid=grid,
+        in_specs=[pl.BlockSpec((chunk, bf), lambda ff, tt: (tt, ff))],
+        out_specs=pl.BlockSpec((chunk, bf), lambda ff, tt: (tt, ff)),
+        out_shape=jax.ShapeDtypeStruct((steps, feat), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bf), jnp.float32)],
+        interpret=interpret,
+    )(c)

@@ -1,0 +1,46 @@
+"""Public wrapper for the whole-train affine membrane scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import affine_scan_pallas
+from .ref import affine_scan_ref
+
+
+def lif_parallel_scan(
+    c: jnp.ndarray,
+    *,
+    alpha: float,
+    chunk: int = 128,
+    bf: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """All-timesteps v[t] = alpha*v[t-1] + c[t] for c of shape (T, F).
+
+    On TPU this runs the chunked Pallas kernel (MXU lower-triangular
+    matmul per chunk, VMEM carry between chunks).  In auto mode
+    (``interpret is None``) off-TPU the log-depth ``associative_scan``
+    reference runs instead — same arithmetic, bit-identical under the
+    integer-weight invariant.  Pass ``interpret=True`` to force the
+    Pallas kernel body through the interpreter (CI coverage of the TPU
+    path).
+    """
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return affine_scan_ref(c, alpha=alpha)
+        interpret = False
+    steps, feat = c.shape
+    ck = min(chunk, steps) if steps % min(chunk, steps) == 0 else steps
+    pt = (-steps) % ck
+    bf_eff = min(bf, feat) if feat % min(bf, feat) == 0 else feat
+    pf = (-feat) % bf_eff
+    if pt or pf:
+        c = jnp.pad(c, ((0, pt), (0, pf)))
+    v = affine_scan_pallas(
+        c, alpha=alpha, chunk=ck, bf=bf_eff, interpret=interpret
+    )
+    return v[:steps, :feat]
+
+
+__all__ = ["lif_parallel_scan", "affine_scan_ref"]

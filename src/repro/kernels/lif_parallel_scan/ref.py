@@ -1,0 +1,37 @@
+"""jnp reference: log-depth affine membrane scan.
+
+The reset-free LIF membrane recurrence
+
+    v[t] = alpha * v[t-1] + c[t],        v[-1] = 0
+
+is the composition of affine maps ``x -> a*x + b`` with ``(a, b) =
+(alpha, c[t])``.  Affine maps compose associatively::
+
+    (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2)
+
+so the whole trajectory falls out of one ``jax.lax.associative_scan`` in
+log depth instead of T sequential steps.  All products are exact when
+``alpha`` is 0 or 1 (the multiplier collapses to 0/1), and exact for
+dyadic ``alpha`` while magnitudes stay inside the f32 window — the same
+integer-weight invariant the rest of the runtime leans on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(left, right):
+    la, lb = left
+    ra, rb = right
+    return la * ra, ra * lb + rb
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def affine_scan_ref(c: jnp.ndarray, *, alpha: float) -> jnp.ndarray:
+    """v[t] = alpha*v[t-1] + c[t] for c of shape (T, F), zero init."""
+    a = jnp.full((c.shape[0], 1), alpha, c.dtype)
+    _, v = jax.lax.associative_scan(_combine, (a, c), axis=0)
+    return v

@@ -1,0 +1,444 @@
+"""Differential harness for the temporal-parallel (whole-train) paradigm.
+
+``NetworkExecutable.run_temporal`` computes all T timesteps of the
+feed-forward interval of the graph at once — one whole-train projection
+per population plus a log-depth associative scan for the membrane
+recurrence — instead of walking a ``lax.scan`` step by step.  The
+contract under test:
+
+* **exact modes** (``alpha0``: alpha == 0; ``count``: alpha == 1 with
+  non-negative weights and integer threshold) are **bit-identical** to
+  the brute-force unrolled oracle (:func:`run_graph_reference`) and to
+  every step-serial launch path — fused, vmap, sharded, solo;
+* the **iterative mode** (everything else) converges to the same fixed
+  point; with the integer weights and short trains used here every
+  product is exactly representable, so its assertions are bit-identical
+  too, and the launch record (``report.temporal``) must show
+  ``residual == 0`` whenever the loop stopped before the ``max_iters``
+  cap;
+* recurrent graphs split into (pre, step-serial block, post): only the
+  back-edge interval falls back to the scan, and the hybrid launch
+  stays bit-identical to the oracle;
+* the four-way ``choose_form(steps=...)`` never perturbs the pinned
+  three-way serial decision and never picks temporal for back-edges.
+
+Satellite coverage rides along: the activity profiler's optional raster
+capture + ISI histogram, and the Pallas scan kernel's interpret-mode
+(TPU code path on CPU) agreement with the jnp reference.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Population, SwitchingCompiler
+from repro.core.layer import (
+    LIFParams,
+    SNNNetwork,
+    random_projection,
+    random_sparse_projection,
+)
+from repro.core.runtime import (
+    choose_temporal_mode,
+    network_executable,
+    profile_outputs,
+    profile_run,
+    run_graph_reference,
+    temporal_step,
+)
+from repro.core.switching import CompileReport, temporal_character
+from repro.kernels.lif_parallel_scan import affine_scan_ref, lif_parallel_scan
+
+#: T short enough that fractional dyadic alpha stays exactly
+#: representable through the whole train (magnitude bits + T <= 24), so
+#: even iterative-mode fixtures assert bit-identity, no atol.
+STEPS, BATCH = 10, 3
+
+#: Feed-forward fixtures: (populations, projection specs, paradigms,
+#: lif, sparse?, seed).  One per reset-resolution mode plus a sparse
+#: iterative one.  Projection spec: (pre, post, density, delay_range,
+#: inhibitory_fraction).
+FIXTURES = {
+    "alpha0-mix": (
+        [("in", 14), ("h", 18), ("out", 9)],
+        [("in", "h", 0.3, 2, 0.2), ("h", "out", 0.4, 3, 0.2)],
+        ["serial", "parallel"],
+        LIFParams(alpha=0.0, v_th=64.0),
+        False, 101,
+    ),
+    "count-chain": (
+        [("in", 12), ("h", 15), ("out", 8)],
+        [("in", "h", 0.35, 2, 0.0), ("h", "out", 0.4, 2, 0.0)],
+        ["serial", "serial"],
+        LIFParams(alpha=1.0, v_th=64.0),
+        False, 202,
+    ),
+    "iter-mix": (
+        [("in", 13), ("h", 16), ("out", 7)],
+        [("in", "h", 0.3, 2, 0.2), ("h", "out", 0.35, 2, 0.2)],
+        ["parallel", "serial"],
+        LIFParams(alpha=0.5, v_th=64.0),
+        False, 303,
+    ),
+    "iter-sparse": (
+        [("in", 15), ("h", 14), ("out", 9)],
+        [("in", "h", 0.25, 3, 0.2), ("h", "out", 0.3, 2, 0.2)],
+        ["serial", "serial"],
+        LIFParams(alpha=0.5, v_th=64.0),
+        True, 404,
+    ),
+    "hybrid-loop": (
+        [("in", 14), ("h", 18), ("out", 9)],
+        [("in", "h", 0.3, 2, 0.2), ("h", "h", 0.25, 2, 0.2),
+         ("h", "out", 0.4, 2, 0.2)],
+        ["serial", "parallel", "serial"],
+        LIFParams(alpha=0.5, v_th=64.0),
+        True, 505,
+    ),
+}
+
+#: expected reset-resolution mode of every whole-train population
+MODES = {
+    "alpha0-mix": "alpha0",
+    "count-chain": "count",
+    "iter-mix": "iterative",
+    "iter-sparse": "iterative",
+    "hybrid-loop": "iterative",
+}
+
+_CACHE = {}
+
+
+def _fixture(name):
+    if name in _CACHE:
+        return _CACHE[name]
+    pop_spec, proj_spec, paradigms, lif, sparse, seed = FIXTURES[name]
+    pops = {n: Population(f"{name}.{n}", s) for n, s in pop_spec}
+    projs = []
+    for i, (pre, post, density, dr, inhib) in enumerate(proj_spec):
+        if sparse:
+            p = random_sparse_projection(
+                pops[pre], pops[post], density, dr, seed=seed + i,
+                inhibitory_fraction=inhib,
+            )
+        else:
+            p = random_projection(
+                pops[pre], pops[post], density, dr, seed=seed + i,
+                inhibitory_fraction=inhib,
+            )
+        p.lif = lif
+        projs.append(p)
+    net = SNNNetwork(
+        populations=[pops[n] for n, _ in pop_spec], projections=projs,
+        name=name,
+    )
+    report = CompileReport(layers=[
+        SwitchingCompiler(par).compile_layer(l)
+        for par, l in zip(paradigms, net.layers)
+    ])
+    exe = network_executable(net, report)
+    rng = np.random.default_rng(seed)
+    spikes = (
+        rng.random((STEPS, BATCH, net.n_input)) < 0.3
+    ).astype(np.float32)
+    want = run_graph_reference(net, spikes)
+    _CACHE[name] = (net, report, exe, spikes, want)
+    return _CACHE[name]
+
+
+# ---------------------------------------------------------------------------
+# whole-train vs oracle and vs every step-serial path
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_temporal_matches_unrolled_oracle(name):
+    """run_temporal is bit-identical to the brute-force numpy oracle on
+    every fixture — exact modes and converged iterative alike."""
+    net, report, exe, spikes, want = _fixture(name)
+    got = exe.run(spikes, temporal=True)
+    assert len(got) == len(net.layers)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+    # spike activity, not a trivially-silent net
+    assert sum(float(z.sum()) for z in want) > 0
+
+
+@pytest.mark.parametrize("path", ["fused", "vmap", "sharded", "solo"])
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_temporal_matches_step_serial_paths(name, path):
+    """Whole-train and per-step launches agree bit-for-bit."""
+    net, report, exe, spikes, want = _fixture(name)
+    got = [np.asarray(z) for z in exe.run_temporal(spikes)]
+    if path == "fused":
+        base = exe.run(spikes)
+    elif path == "vmap":
+        base = exe.run(spikes, batched=True)
+    elif path == "sharded":
+        exe.shard()                         # identity fallback on 1 device
+        base = exe.run(spikes)
+    else:                                   # solo: one request at a time
+        base = [
+            np.concatenate(
+                [np.asarray(exe.run_temporal(spikes[:, b:b + 1])[i])
+                 for b in range(BATCH)],
+                axis=1,
+            )
+            for i in range(len(net.layers))
+        ]
+    for a, b in zip(got, base):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("name", ["alpha0-mix", "hybrid-loop"])
+def test_temporal_masking_matches_fused(name):
+    """valid_steps masking on the temporal path is the fused contract:
+    live prefixes bit-identical, padded steps exact zeros."""
+    net, report, exe, spikes, want = _fixture(name)
+    valid = np.asarray([STEPS, 4, 0], np.int32)
+    got = [np.asarray(z) for z in exe.run_temporal(spikes, valid_steps=valid)]
+    base = exe.run(spikes, valid_steps=valid)
+    for a, b in zip(got, base):
+        np.testing.assert_array_equal(a, b)
+    for z in got:                           # padded slots are inert
+        assert z[:, 2].sum() == 0
+        assert z[4:, 1].sum() == 0
+
+
+def test_temporal_interpret_matches_compiled():
+    """interpret=True (the TPU kernel code path on CPU) agrees."""
+    net, report, exe, spikes, want = _fixture("iter-mix")
+    got = [np.asarray(z) for z in exe.run_temporal(spikes, interpret=True)]
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# launch records: split, modes, iterations, residual
+
+
+def test_temporal_report_exact_modes():
+    """Exact modes always record one pass and zero residual."""
+    for name in ("alpha0-mix", "count-chain"):
+        net, report, exe, spikes, _ = _fixture(name)
+        exe.run_temporal(spikes)
+        rec = report.temporal[(BATCH, STEPS)]
+        # feed-forward: every updated population is whole-train ("pre"),
+        # the step-serial block is empty
+        n_pops = len(exe.plan.update_order)
+        assert rec.split == (n_pops, 0, 0)
+        assert set(rec.modes.values()) == {MODES[name]}
+        assert all(v == 1 for v in rec.iterations.values())
+        assert all(v == 0 for v in rec.residual.values())
+        assert rec.max_iters == STEPS + 1
+        assert rec.as_dict()["split"] == [n_pops, 0, 0]
+
+
+def test_temporal_report_iterative_bound():
+    """Iterative populations converge under the default cap (T+1) and
+    the documented bound holds: residual == 0 on early stop."""
+    net, report, exe, spikes, _ = _fixture("iter-mix")
+    exe.run_temporal(spikes)
+    rec = report.temporal[(BATCH, STEPS)]
+    assert set(rec.modes.values()) == {"iterative"}
+    for p, iters in rec.iterations.items():
+        assert 1 <= iters < rec.max_iters
+        assert rec.residual[p] == 0
+
+
+def test_temporal_report_hybrid_split():
+    """The back-edge interval is step-serial; pre/post stay whole-train."""
+    net, report, exe, spikes, _ = _fixture("hybrid-loop")
+    exe.run_temporal(spikes)
+    rec = report.temporal[(BATCH, STEPS)]
+    pre, block, post = rec.split
+    assert block >= 1 and post >= 1
+    assert pre + block + post == len(exe.plan.update_order)
+    # whole-train populations only ever appear in pre/post
+    assert len(rec.modes) == pre + post
+
+
+def test_temporal_max_iters_cap_reports_residual():
+    """Cutting the fixed point short is visible, not silent: with a
+    1-pass cap on an active iterative net the record shows the cap hit
+    and a positive residual (pass 1 vs the all-silent init)."""
+    net, report, exe, spikes, want = _fixture("iter-mix")
+    assert float(want[0].sum()) > 0
+    exe.run_temporal(spikes, max_iters=1)
+    rec = report.temporal[(BATCH, STEPS)]
+    assert rec.max_iters == 1
+    assert all(v == 1 for v in rec.iterations.values())
+    assert sum(rec.residual.values()) > 0
+
+
+def test_temporal_forms_recorded():
+    """The temporal launch records its per-projection forms next to the
+    serial ones, under the "temporal" path key."""
+    net, report, exe, spikes, _ = _fixture("iter-sparse")
+    exe.run_temporal(spikes)
+    forms = report.serial_forms[("temporal", BATCH)]
+    assert any(f in ("temporal", "temporal_sparse") for f in forms)
+
+
+# ---------------------------------------------------------------------------
+# mode choice and the switching surface
+
+
+def test_choose_temporal_mode_rules():
+    assert choose_temporal_mode(0.0, 64.0, nonneg_weights=False) == "alpha0"
+    assert choose_temporal_mode(1.0, 64.0, nonneg_weights=True) == "count"
+    # count needs ALL of: alpha == 1, non-negative weights, integer v_th
+    assert choose_temporal_mode(1.0, 64.0, nonneg_weights=False) == "iterative"
+    assert choose_temporal_mode(1.0, 64.5, nonneg_weights=True) == "iterative"
+    assert choose_temporal_mode(0.5, 64.0, nonneg_weights=True) == "iterative"
+
+
+def test_count_ineligible_mixed_sign_falls_back():
+    """alpha == 1 with inhibitory synapses may not use the counting
+    closed form — the executor must pick iterative, and still match the
+    oracle bit-for-bit."""
+    a, b = Population("ci.a", 12), Population("ci.b", 10)
+    p = random_projection(a, b, 0.4, 2, seed=7, inhibitory_fraction=0.3)
+    assert (np.asarray(p.weights) < 0).any()
+    p.lif = LIFParams(alpha=1.0, v_th=64.0)
+    net = SNNNetwork(populations=[a, b], projections=[p])
+    report = CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(p)]
+    )
+    exe = network_executable(net, report)
+    rng = np.random.default_rng(7)
+    spikes = (rng.random((STEPS, 2, 12)) < 0.3).astype(np.float32)
+    got = exe.run(spikes, temporal=True)
+    want = run_graph_reference(net, spikes)
+    np.testing.assert_array_equal(got[0], want[0])
+    rec = report.temporal[(2, STEPS)]
+    assert set(rec.modes.values()) == {"iterative"}
+    tc = temporal_character(p)
+    assert tc["mode"] == "iterative" and not tc["exact"]
+    assert tc["nonneg_weights"] is False
+
+
+def test_temporal_character_exact_flags():
+    net, report, exe, spikes, _ = _fixture("count-chain")
+    for l in net.layers:
+        tc = temporal_character(l)
+        assert tc["mode"] == "count" and tc["exact"]
+        assert tc["character"] == l.character()
+
+
+def test_choose_form_fourway():
+    """steps=None keeps the pinned three-way outcome; a step count lets
+    temporal compete; back-edges (allow_temporal=False) never get it."""
+    from repro.core.cost_model import DEFAULT_SERIAL_BATCH_COST as cm
+
+    geoms = [
+        (50, 100, 100, 1, 1), (2000, 100, 100, 1, 8),
+        (100_000, 2000, 2000, 4, 4), (0, 64, 64, 1, 2),
+    ]
+    for rows, ns, nt, dr, b in geoms:
+        base = cm.choose_form(rows, ns, nt, dr, b)
+        assert cm.choose_form(rows, ns, nt, dr, b, steps=None) == base
+        assert base in ("event", "sparse", "dense")
+        with_steps = cm.choose_form(rows, ns, nt, dr, b, steps=100_000)
+        assert with_steps in (base, "temporal")
+        assert cm.choose_form(
+            rows, ns, nt, dr, b, steps=100_000, allow_temporal=False
+        ) == base
+    # empty layers never go temporal, whatever the step count
+    assert cm.choose_form(0, 64, 64, 1, 2, steps=10**9) == "event"
+    # equal operand costs: the default constants amortize the launch
+    # overhead past temporal_base/step_coeff steps and not before
+    flip = int(cm.temporal_base / cm.step_coeff)
+    assert cm.choose_form(2000, 100, 100, 1, 8, steps=flip * 4) == "temporal"
+    assert cm.choose_form(2000, 100, 100, 1, 8, steps=2) != "temporal"
+
+
+def test_temporal_step_standalone_matches_oracle():
+    """The module-level temporal_step (one projection + LIF over the
+    whole train) agrees with the sequential reference kernel."""
+    from repro.core import random_layer
+    from repro.core.runtime import run_reference
+
+    layer = random_layer(20, 16, density=0.4, delay_range=3, seed=11)
+    layer.lif = LIFParams(alpha=0.0, v_th=64.0)
+    rng = np.random.default_rng(11)
+    spikes = (rng.random((24, 2, 20)) < 0.3).astype(np.float32)
+    # delay-stacked (d_slots, S, N) weights straight from the layer
+    w = np.zeros((3 + 1, 20, 16), np.float32)
+    s, n = np.nonzero(layer.connectivity())
+    w[layer.delays[s, n], s, n] = layer.weights[s, n]
+    z, iters, resid = temporal_step(
+        w, spikes, alpha=0.0, v_th=64.0
+    )
+    want = np.asarray(run_reference(layer, spikes))
+    np.testing.assert_array_equal(np.asarray(z), want)
+    assert int(iters) == 1 and int(resid) == 0
+
+
+# ---------------------------------------------------------------------------
+# the Pallas scan kernel: interpret mode vs jnp reference
+
+
+@pytest.mark.parametrize("alpha,shape", [
+    (0.0, (12, 40)), (1.0, (12, 40)), (0.5, (12, 40)),
+    (1.0, (300, 130)),            # padded + chunked grid
+])
+def test_scan_kernel_interpret_matches_ref(alpha, shape):
+    """The chunked Pallas kernel in interpret mode (TPU code path on the
+    CPU runner) is bit-identical to the associative-scan reference on
+    integer currents — cross-chunk carry included."""
+    rng = np.random.default_rng(int(alpha * 10) + shape[0])
+    c = rng.integers(-5, 6, size=shape).astype(np.float32)
+    ref = np.asarray(affine_scan_ref(c, alpha=alpha))
+    got = np.asarray(lif_parallel_scan(c, alpha=alpha, interpret=True))
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# satellite: profiler raster capture + ISI histogram
+
+
+def test_profile_rasters_default_off():
+    net, report, exe, spikes, want = _fixture("alpha0-mix")
+    prof = profile_outputs(net, spikes, want)
+    assert prof.rasters is None
+    with pytest.raises(ValueError, match="record_rasters"):
+        prof.isi_histogram(net.populations[0].name)
+
+
+def test_profile_rasters_and_isi():
+    """Rasters keep the exact trains; the ISI histogram counts every
+    consecutive-spike interval, pooled over (lane, neuron)."""
+    net, report, exe, spikes, want = _fixture("alpha0-mix")
+    prof = profile_outputs(net, spikes, want, record_rasters=True)
+    assert set(prof.rasters) == {p.name for p in net.populations}
+    np.testing.assert_array_equal(
+        prof.rasters[net.populations[1].name], want[0]
+    )
+    # hand-check against a tiny raster with known intervals
+    name = net.populations[1].name
+    hist = prof.isi_histogram(name)
+    z = np.asarray(want[0])
+    expect = np.zeros(STEPS, np.int64)
+    for b in range(z.shape[1]):
+        for n in range(z.shape[2]):
+            ts = np.nonzero(z[:, b, n])[0]
+            for d in np.diff(ts):
+                expect[d] += 1
+    np.testing.assert_array_equal(hist, expect)
+    assert hist[0] == 0                    # one spike per step max
+    assert hist.sum() == sum(
+        max(0, len(np.nonzero(z[:, b, n])[0]) - 1)
+        for b in range(z.shape[1]) for n in range(z.shape[2])
+    )
+
+
+def test_profile_run_passthrough_records_rasters():
+    net, report, exe, spikes, _ = _fixture("count-chain")
+    outs, prof = profile_run(net, report, spikes, record_rasters=True)
+    assert report.activity is prof
+    assert prof.rasters is not None
+    np.testing.assert_array_equal(prof.rasters[net.populations[-1].name],
+                                  outs[-1])
+    # and the temporal path produces the same profile
+    outs2, prof2 = profile_run(net, report, spikes, temporal=True)
+    assert prof2.rasters is None
+    for a, b in zip(outs, outs2):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,147 @@
+"""Hypothesis properties for the temporal-parallel paradigm.
+
+Whatever hypothesis draws — leak factor in {0, 0.5, 1}, delay ranges
+1-4, feed-forward / self-loop / skip-and-loop geometries, CSR or dense
+storage — ``run_temporal`` must spike bit-identically to the fused
+per-step scan and to the unrolled oracle.  Trains are kept short
+(T = 10) so fractional dyadic alpha stays exactly representable
+through the whole window (magnitude bits + T <= 24) and even
+iterative-mode draws assert equality with no atol; CSR draws piggyback
+on the densify-and-diff harness by also diffing against the densified
+twin's temporal launch.  Gated on ``hypothesis`` exactly like
+``test_sparse_property.py`` (the non-random core runs ungated in
+``test_temporal_equivalence.py``).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Population, SwitchingCompiler
+from repro.core.layer import (
+    LIFParams,
+    SNNNetwork,
+    random_projection,
+    random_sparse_projection,
+)
+from repro.core.runtime import network_executable, run_graph_reference
+from repro.core.switching import CompileReport
+
+STEPS = 10
+
+#: the three recurrent geometries: (pops, projection endpoints, paradigms)
+GEOMETRIES = {
+    "chain": (
+        [("in", 12), ("h", 14), ("out", 8)],
+        [("in", "h"), ("h", "out")],
+        ["serial", "parallel"],
+    ),
+    "self-loop": (
+        [("in", 11), ("h", 13), ("out", 7)],
+        [("in", "h"), ("h", "h"), ("h", "out")],
+        ["serial", "serial", "parallel"],
+    ),
+    "skip-and-loop": (
+        [("in", 10), ("h1", 12), ("h2", 9), ("out", 6)],
+        [("in", "h1"), ("h1", "h2"), ("in", "h2"), ("h2", "h2"),
+         ("h2", "out"), ("out", "h1")],
+        ["serial", "parallel", "serial", "serial", "serial", "serial"],
+    ),
+}
+
+
+def _build(geometry, alpha, delay_range, density, sparse, seed):
+    pop_spec, proj_spec, paradigms = GEOMETRIES[geometry]
+    pops = {n: Population(f"tp.{n}", s) for n, s in pop_spec}
+    make = random_sparse_projection if sparse else random_projection
+    projs = []
+    for i, (pre, post) in enumerate(proj_spec):
+        p = make(pops[pre], pops[post], density, delay_range, seed=seed + i)
+        p.lif = LIFParams(alpha=alpha, v_th=64.0)
+        projs.append(p)
+    net = SNNNetwork(
+        populations=[pops[n] for n, _ in pop_spec], projections=projs,
+        name=f"tp-{geometry}",
+    )
+    report = CompileReport(layers=[
+        SwitchingCompiler(par).compile_layer(l)
+        for par, l in zip(paradigms, net.layers)
+    ])
+    return net, report
+
+
+@given(
+    geometry=st.sampled_from(sorted(GEOMETRIES)),
+    alpha=st.sampled_from([0.0, 0.5, 1.0]),
+    dr=st.integers(1, 4),
+    density=st.sampled_from([0.05, 0.2, 0.45]),
+    sparse=st.booleans(),
+    batch=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+@settings(
+    max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+def test_temporal_bit_identical_to_fused_and_oracle(
+    geometry, alpha, dr, density, sparse, batch, seed
+):
+    """run_temporal == fused scan == unrolled oracle, bit for bit, on
+    every drawn (alpha, delay, geometry, storage, batch)."""
+    net, report = _build(geometry, alpha, dr, density, sparse, seed)
+    exe = network_executable(net, report)
+    rng = np.random.default_rng(seed)
+    spikes = (
+        rng.random((STEPS, batch, net.n_input)) < 0.3
+    ).astype(np.float32)
+    got = exe.run(spikes, temporal=True)
+    fused = exe.run(spikes)
+    want = run_graph_reference(net, spikes)
+    for a, b, c in zip(got, fused, want):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    # the documented bound: early-stopped fixed points have converged
+    rec = report.temporal[(batch, STEPS)]
+    for p, iters in rec.iterations.items():
+        if iters < rec.max_iters:
+            assert rec.residual[p] == 0
+
+
+@given(
+    alpha=st.sampled_from([0.0, 0.5, 1.0]),
+    dr=st.integers(1, 4),
+    density=st.sampled_from([0.1, 0.4]),
+    seed=st.integers(0, 1000),
+)
+@settings(
+    max_examples=10, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+def test_temporal_csr_matches_densified_twin(alpha, dr, density, seed):
+    """Storage never leaks into temporal semantics: a CSR net and its
+    densified twin launch run_temporal bit-identically (the
+    densify-and-diff harness, extended to the whole-train path)."""
+    a = Population("tw.a", 13)
+    b = Population("tw.b", 11)
+    p = random_sparse_projection(a, b, density, dr, seed=seed)
+    p.lif = LIFParams(alpha=alpha, v_th=64.0)
+    net = SNNNetwork(populations=[a, b], projections=[p])
+    dnet = SNNNetwork(populations=[a, b], projections=[p.densify()])
+    exe = network_executable(net, CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(net.layers[0])]
+    ))
+    dexe = network_executable(dnet, CompileReport(
+        layers=[SwitchingCompiler("serial").compile_layer(dnet.layers[0])]
+    ))
+    rng = np.random.default_rng(seed)
+    spikes = (rng.random((STEPS, 2, 13)) < 0.4).astype(np.float32)
+    got = exe.run(spikes, temporal=True)
+    twin = dexe.run(spikes, temporal=True)
+    for x, y in zip(got, twin):
+        np.testing.assert_array_equal(x, y)
+    # and forcing each whole-train operand changes nothing
+    for form in ("sparse", "dense"):
+        forced = exe.run(spikes, temporal=True, serial_form=form)
+        for x, y in zip(forced, got):
+            np.testing.assert_array_equal(x, y)

@@ -76,6 +76,41 @@ def fit_from_bench(bench: dict) -> dict:
     fitted = SerialBatchCostModel.fit_from_sweep(
         points, n_rows_total=rows, dense_macs_per_batch=macs
     )
+    extras = {}
+    # sparse sweep present -> refit the ELL gather coefficient from the
+    # measured event/sparse ratio (same rows, so the ratio is the fit)
+    sp = bench.get("sparse_sweep")
+    if sp and sp.get("points"):
+        gather_pts = [
+            {
+                "batch": sp["batch"],
+                "event_us": p["event_us"],
+                "sparse_us": p["sparse_us"],
+            }
+            for p in sp["points"]
+            if p.get("event_us", 0) > 0 and p.get("sparse_us", 0) > 0
+        ]
+        if gather_pts:
+            fitted = fitted.fit_gather_from_sweep(gather_pts)
+            extras["gather_fitted_from_sizes"] = [
+                p["size"] for p in sp["points"]
+            ]
+    # temporal sweep present -> refit the whole-train constants from the
+    # fixture that carries the pinned crossover
+    ts = bench.get("temporal_sweep")
+    if ts and ts.get("fixtures"):
+        fix = max(
+            ts["fixtures"], key=lambda f: f.get("speedup_at_pin", 0.0)
+        )
+        fitted = fitted.fit_temporal_from_sweep(
+            fix["points"],
+            dense_macs_per_batch=fix["dense_macs_per_batch"],
+            batch=ts["batch"],
+        )
+        extras["temporal_fitted_from"] = fix["name"]
+        extras["temporal_fitted_at_steps"] = [
+            p["steps"] for p in fix["points"]
+        ]
     sizes = sweep["sizes"]
     per_layer = []
     for i in range(len(sizes) - 1):
@@ -107,6 +142,7 @@ def fit_from_bench(bench: dict) -> dict:
         "dense_macs_per_batch": macs,
         "crossovers": per_layer,
         "fitted_from_batches": [p["batch"] for p in points],
+        **extras,
     }
 
 
@@ -130,6 +166,14 @@ def main() -> None:
           f"exponent={d['batch_exponent']:.3f}")
     print(f"fitted:  scatter={f['scatter_coeff']:.2f} "
           f"exponent={f['batch_exponent']:.3f}")
+    if "gather_fitted_from_sizes" in result:
+        print(f"fitted:  gather={f['gather_coeff']:.2f} "
+              f"(default {d['gather_coeff']:.2f}) from sparse_sweep")
+    if "temporal_fitted_from" in result:
+        print(f"fitted:  temporal_coeff={f['temporal_coeff']:.3f} "
+              f"temporal_base={f['temporal_base']:.0f} "
+              f"step_coeff={f['step_coeff']:.0f} "
+              f"from temporal_sweep[{result['temporal_fitted_from']}]")
     for row in result["crossovers"]:
         print(f"  layer {row['layer']}: crossover "
               f"{row['default_crossover']} -> {row['fitted_crossover']}")
